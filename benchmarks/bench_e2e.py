@@ -1,0 +1,64 @@
+"""Paper Fig 13/14: end-to-end latency vs RPS — xGR vs PagedAttention-style
+baseline on the OneRec-class GR model.
+
+xGR       = graph dispatch (1 program/batch) + staged separated-cache
+            attention + device-resident filtering + multi-stream.
+baseline  = per-phase dispatch + per-beam materialized prefix (paged) +
+            host filtering + single stream (the vLLM/xLLM-shaped pipeline).
+
+Batch compute is real measured CPU wall time; queueing/streams are composed
+on the simulated clock (see serving/server.py for the rationale).  The
+shapes are scaled to CPU (reduced model, BW=16) — the paper's relative
+ordering, not absolute numbers, is the reproduction target.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.config import GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.data import gen_catalog, gen_histories, poisson_trace
+from repro.models import get_model
+from repro.serving import GREngine, run_server
+
+
+def main():
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=16, top_k=16, num_decode_phases=3,
+                  num_items=2000, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    hist = gen_histories(catalog, 100, max_tokens=192, seed=1)
+
+    variants = {
+        "xgr": dict(graph=True, impl="staged", streams=4),
+        "paged_baseline": dict(graph=False, impl="paged", streams=1),
+    }
+    for rps in (50, 100, 200):
+        trace = poisson_trace(hist, rps=rps, duration_s=max(0.5, 40 / rps),
+                              seed=2)
+        for name, v in variants.items():
+            scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
+                               num_streams=v["streams"],
+                               batch_wait_quota_ms=5.0,
+                               graph_dispatch=v["graph"])
+            eng = GREngine(cfg, gr, params, trie, scfg,
+                           attention_impl=v["impl"])
+            rep = run_server(eng, trace, scfg)
+            s = rep.summary
+            row(f"fig13_{name}_rps{rps}",
+                s["avg_ms"] * 1e3,
+                f"p99_ms={s['p99_ms']:.1f};avg_ms={s['avg_ms']:.1f}"
+                f";reqs={s['requests']}"
+                f";slo_viol={rep.slo_violations}"
+                f";disp_per_batch={rep.engine_stats['dispatches_per_batch']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

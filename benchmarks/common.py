@@ -1,0 +1,42 @@
+"""Shared benchmark utilities.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call``
+is measured CPU wall time where wall time is meaningful (host-side costs,
+relative comparisons on the small GR model — the paper's host-bound regime);
+``derived`` carries the analytically/dry-run-derived metric for the TPU
+target (bytes, roofline milliseconds, ratios), labelled per row.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def flops_bytes(fn, *args) -> dict:
+    """cost_analysis of a jitted callable on the current (1-dev) backend."""
+    lowered = jax.jit(fn).lower(*args)
+    ca = lowered.compile().cost_analysis()
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}

@@ -1,0 +1,70 @@
+"""Diagnostic: compile a 1-layer unrolled probe for (arch, shape) and print
+the largest collectives + largest fusions by bytes (what to fix next)."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse    # noqa: E402
+import re          # noqa: E402
+
+import repro.models.attention as attention      # noqa: E402
+import repro.models.ssm as ssm                  # noqa: E402
+from repro.config import get_shape              # noqa: E402
+from repro.configs import get_config            # noqa: E402
+from repro.launch import dryrun                 # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline.analysis import _DTYPE_BYTES, probe_pair  # noqa: E402
+from repro.sharding.hints import mesh_context   # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--opts", default="")
+ap.add_argument("--top", type=int, default=15)
+args = ap.parse_args()
+
+for o in [o for o in args.opts.split(",") if o]:
+    mod, name = {"flash": (attention, "FLASH_ENABLED"),
+                 "rwkv_shard": (ssm, "RWKV_HEAD_SHARD"),
+                 "sep_decode": (attention, "SEPARATED_DECODE")}[o]
+    setattr(mod, name, True)
+attention.FLASH_UNROLL = True
+
+cfg = get_config(args.arch)
+shape = get_shape(args.shape)
+mesh = make_production_mesh()
+cfg_a, _, _ = probe_pair(cfg)
+with mesh_context(mesh):
+    lowered, model = dryrun.lower_step_probe(cfg_a, shape, mesh)
+txt = lowered.compile().as_text()
+
+pat = re.compile(
+    r"%?([\w.-]+)\s*=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+items = []
+for m in pat.finditer(txt):
+    name_, tup, dt, dims, kind = m.groups()
+    if tup is not None:
+        b = 0
+        for tm in re.finditer(r"(\w+)\[([0-9,]*)\]", tup):
+            n = 1
+            for d in tm.group(2).split(","):
+                if d:
+                    n *= int(d)
+            b += n * _DTYPE_BYTES.get(tm.group(1), 4)
+        shape_str = tup[:60]
+    else:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES.get(dt, 4)
+        shape_str = f"{dt}[{dims}]"
+    items.append((b, kind, shape_str, name_))
+items.sort(reverse=True)
+total = sum(b for b, *_ in items)
+print(f"total collective result bytes (1-layer probe): {total/1e9:.2f} GB, "
+      f"{len(items)} ops")
+for b, kind, shape_str, name_ in items[:args.top]:
+    print(f"  {b/1e6:10.1f} MB  {kind:18s} {shape_str}")

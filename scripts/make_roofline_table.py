@@ -1,0 +1,52 @@
+"""Build the EXPERIMENTS.md roofline + dry-run tables from
+experiments/dryrun/*.json."""
+
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+recs = []
+for f in sorted(os.listdir(DIR)):
+    if f.endswith(".json"):
+        with open(os.path.join(DIR, f)) as fh:
+            recs.append(json.load(fh))
+
+ARCH_ORDER = ["internlm2-1.8b", "qwen2-vl-72b", "stablelm-3b", "minicpm3-4b",
+              "qwen2.5-3b", "deepseek-v2-236b", "arctic-480b", "rwkv6-1.6b",
+              "zamba2-2.7b", "whisper-base"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def key(r):
+    return (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]),
+            r["mesh"])
+
+
+recs.sort(key=key)
+
+print("## Dry-run table (80 = 10 arch x 4 shape x 2 mesh)\n")
+print("| arch | shape | mesh | GB/dev | fits 16GB | lower s | compile s |")
+print("|---|---|---|---:|---|---:|---:|")
+for r in recs:
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+          f"| {r['per_device_bytes']/1e9:.2f} "
+          f"| {'yes' if r['fits_16gb'] else 'NO'} "
+          f"| {r.get('lower_s','-')} | {r.get('compile_s','-')} |")
+
+print("\n## Roofline (single-pod 256 chips, per step)\n")
+print("| arch | shape | compute ms | memory ms | collective ms | bottleneck "
+      "| MODEL_FLOPs | HLO_FLOPs | useful | top collectives |")
+print("|---|---|---:|---:|---:|---|---:|---:|---:|---|")
+for r in recs:
+    if r["mesh"] != "pod256" or "roofline" not in r:
+        continue
+    rl = r["roofline"]
+    cc = rl.get("collective_counts", {})
+    top = ",".join(f"{k}:{v}" for k, v in cc.items() if v)
+    print(f"| {r['arch']} | {r['shape']} "
+          f"| {rl['compute_s']*1e3:.2f} | {rl['memory_s']*1e3:.2f} "
+          f"| {rl['collective_s']*1e3:.2f} | {rl['bottleneck']} "
+          f"| {rl['model_flops']:.2e} | {rl['hlo_flops_global']:.2e} "
+          f"| {rl['useful_flops_ratio']:.2f} | {top} |")

@@ -1,0 +1,88 @@
+"""§Perf hillclimb runner: lower one (arch × shape) pair on the single-pod
+mesh with selected optimizations toggled, record roofline before/after.
+
+Usage:
+  PYTHONPATH=src python scripts/perf_iter.py --arch internlm2-1.8b \
+      --shape decode_32k --opts sep_decode --tag hc3_sep
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+
+import repro.models.attention as attention           # noqa: E402
+import repro.models.ssm as ssm                       # noqa: E402
+from repro.config import get_shape                   # noqa: E402
+from repro.configs import get_config                 # noqa: E402
+from repro.launch import dryrun                      # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.sharding.hints import mesh_context        # noqa: E402
+
+OPTS = {
+    "flash": (attention, "FLASH_ENABLED"),
+    "rwkv_shard": (ssm, "RWKV_HEAD_SHARD"),
+    "sep_decode": (attention, "SEPARATED_DECODE"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--opts", default="", help="comma list of " + ",".join(OPTS))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--flash-chunk", type=int, default=0)
+    args = ap.parse_args()
+
+    for o in [o for o in args.opts.split(",") if o]:
+        mod, name = OPTS[o]
+        setattr(mod, name, True)
+    if args.flash_chunk:
+        attention.FLASH_CHUNK = args.flash_chunk
+    attention.FLASH_UNROLL = False       # full compile keeps the chunk scan
+
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh()
+    chips = mesh.devices.size
+
+    rec = {"arch": args.arch, "shape": args.shape, "opts": args.opts,
+           "tag": args.tag, "flash_chunk": attention.FLASH_CHUNK}
+    t0 = time.time()
+    with mesh_context(mesh):
+        lowered, model = dryrun.lower_step(cfg, shape, mesh)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    rec["memory"] = dryrun._mem_dict(mem)
+    rec["per_device_bytes"] = int(sum(v for v in (
+        mem.argument_size_in_bytes, mem.output_size_in_bytes,
+        mem.temp_size_in_bytes) if v))
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    # probes need every chunk visible to cost analysis
+    attention.FLASH_UNROLL = True
+    rec["roofline"] = dryrun.run_probe(cfg, shape, mesh, chips)
+    attention.FLASH_UNROLL = False
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    rl = rec["roofline"]
+    print(f"{args.tag}: {args.arch} x {args.shape} opts=[{args.opts}]")
+    print(f"  GB/dev={rec['per_device_bytes']/1e9:.2f} "
+          f"compute={rl['compute_s']*1e3:.2f}ms "
+          f"memory={rl['memory_s']*1e3:.2f}ms "
+          f"collective={rl['collective_s']*1e3:.2f}ms "
+          f"bottleneck={rl['bottleneck']}")
+    print(f"  collectives: {rl['collective_counts']}")
+
+
+if __name__ == "__main__":
+    main()

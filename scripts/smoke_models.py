@@ -1,0 +1,42 @@
+"""Quick dev smoke: every assigned arch (reduced) forward + decode on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import get_model
+
+rng = jax.random.PRNGKey(0)
+ok = True
+for name in ASSIGNED + ["onerec-0.1b"]:
+    cfg = get_config(name).reduced()
+    model = get_model(cfg)
+    try:
+        params = model.init(rng, jnp.float32)
+        B, S = 2, 16
+        batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+        batch.update({k: jnp.zeros(v.shape, v.dtype) if v.dtype != jnp.int32
+                      else jnp.zeros(v.shape, v.dtype)
+                      for k, v in model._extra_inputs(B, S).items()})
+        logits, aux = model.forward(params, batch)
+        assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+        assert not bool(jnp.any(jnp.isnan(logits))), "NaN logits"
+        loss, _ = model.loss(params, batch)
+        assert jnp.isfinite(loss)
+        # prefill + decode
+        cache = model.init_cache(B, S, jnp.float32)
+        last, cache = model.prefill(params, batch, cache)
+        assert last.shape == (B, cfg.vocab_size)
+        tok = jnp.argmax(last, -1).astype(jnp.int32)
+        step_logits, cache = model.decode_step(params, tok, cache)
+        assert step_logits.shape == (B, cfg.vocab_size)
+        assert not bool(jnp.any(jnp.isnan(step_logits)))
+        print(f"OK   {name:20s} loss={float(loss):.3f}")
+    except Exception as e:  # noqa
+        ok = False
+        import traceback
+        print(f"FAIL {name}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=6)
+sys.exit(0 if ok else 1)

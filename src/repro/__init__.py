@@ -1,0 +1,2 @@
+"""repro — xGR (Efficient Generative Recommendation Serving) on JAX/TPU."""
+__version__ = "0.1.0"

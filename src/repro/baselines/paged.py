@@ -1,0 +1,145 @@
+"""PagedAttention-style baseline memory manager (vLLM/xLLM analogue).
+
+The paper's Fig 4/15/16 compare xGR's separated cache against block-paged KV
+management under beam search.  This module reproduces that comparison:
+
+  * ``PagedKVSimulator`` — a faithful block-table allocator: every beam is an
+    independent logical sequence; forking a beam whose last block is
+    partially filled forces a **physical block copy** (context independence);
+    freed beams release blocks.  It counts blocks, copies, and bytes.
+  * ``separated_cache_bytes`` — xGR's footprint: one shared prompt copy plus
+    exactly BW·ND unshared token slots (token granularity, no alignment).
+
+Both are exercised by benchmarks/bench_memory.py across beam widths and
+input lengths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config import GRConfig, ModelConfig
+
+
+def kv_token_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Bytes of K+V for ONE token across all layers."""
+    return (2 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim
+            * dtype_bytes)
+
+
+@dataclasses.dataclass
+class PagedStats:
+    allocated_blocks: int = 0
+    peak_blocks: int = 0
+    block_copies: int = 0
+    copied_tokens: int = 0
+
+
+class PagedKVSimulator:
+    """Block-table KV manager for one request's beam group."""
+
+    def __init__(self, cfg: ModelConfig, block_size: int = 16,
+                 dtype_bytes: int = 2):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.token_bytes = kv_token_bytes(cfg, dtype_bytes)
+        self.stats = PagedStats()
+        self._next_block = 0
+        self._refcount: Dict[int, int] = {}
+        # per-beam: (block_table, tokens_in_last_block, total_len)
+        self._beams: List[List[int]] = []
+        self._lens: List[int] = []
+
+    # -- internals -----------------------------------------------------------
+    def _alloc(self) -> int:
+        b = self._next_block
+        self._next_block += 1
+        self._refcount[b] = 1
+        self.stats.allocated_blocks += 1
+        self._update_peak()
+        return b
+
+    def _update_peak(self):
+        live = sum(1 for c in self._refcount.values() if c > 0)
+        self.stats.peak_blocks = max(self.stats.peak_blocks, live)
+
+    def _release(self, table: List[int]):
+        for b in table:
+            self._refcount[b] -= 1
+
+    # -- API -----------------------------------------------------------------
+    def prefill(self, prompt_len: int, beam_width: int):
+        """Prompt blocks are shared (copy-on-write refcount), as in vLLM."""
+        n_full = prompt_len // self.block_size
+        rem = prompt_len % self.block_size
+        table = [self._alloc() for _ in range(n_full + (1 if rem else 0))]
+        self._beams = []
+        self._lens = []
+        for _ in range(beam_width):
+            for b in table:
+                self._refcount[b] += 1
+            self._beams.append(list(table))
+            self._lens.append(prompt_len)
+        for b in table:                      # drop the builder reference
+            self._refcount[b] -= 1
+        self._update_peak()
+
+    def fork_and_append(self, parents: np.ndarray):
+        """One decode step: each new beam continues parents[i]."""
+        new_beams: List[List[int]] = []
+        new_lens: List[int] = []
+        for p in parents:
+            table = list(self._beams[p])
+            ln = self._lens[p]
+            rem = ln % self.block_size
+            for b in table:
+                self._refcount[b] += 1
+            if rem != 0:
+                # last block partially filled and (potentially) shared:
+                # must copy it to keep the fork's context independent
+                old = table[-1]
+                self._refcount[old] -= 1
+                nb = self._alloc()
+                table[-1] = nb
+                self.stats.block_copies += 1
+                self.stats.copied_tokens += rem
+            else:
+                table.append(self._alloc())
+            new_beams.append(table)
+            new_lens.append(ln + 1)
+        for t in self._beams:
+            self._release(t)
+        self._beams, self._lens = new_beams, new_lens
+        self._update_peak()
+
+    def finish(self):
+        for t in self._beams:
+            self._release(t)
+        self._beams, self._lens = [], []
+
+    # -- reporting -------------------------------------------------------------
+    @property
+    def peak_bytes(self) -> int:
+        return self.stats.peak_blocks * self.block_size * self.token_bytes
+
+    def decode_read_bytes(self, beam_width: int, ln: int) -> int:
+        """Bytes loaded per decode step: every beam reads its whole context
+        (no shared-prefix reuse)."""
+        return beam_width * ln * self.token_bytes
+
+
+def separated_cache_bytes(cfg: ModelConfig, gr: GRConfig, prompt_len: int,
+                          dtype_bytes: int = 2) -> int:
+    """xGR: one shared prompt copy + BW*ND unshared token slots."""
+    tb = kv_token_bytes(cfg, dtype_bytes)
+    return prompt_len * tb + gr.beam_width * gr.num_decode_phases * tb
+
+
+def separated_read_bytes(cfg: ModelConfig, gr: GRConfig, prompt_len: int,
+                         step: int, dtype_bytes: int = 2) -> int:
+    """Bytes loaded per decode step under xGR: prompt KV read ONCE."""
+    tb = kv_token_bytes(cfg, dtype_bytes)
+    return prompt_len * tb + gr.beam_width * (step + 1) * tb

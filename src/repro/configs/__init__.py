@@ -1,0 +1,60 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+OneRec-style GR model.  ``get_config(name)`` resolves an ``--arch`` id."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.config import ModelConfig
+
+from repro.configs import (
+    internlm2_1_8b,
+    qwen2_vl_72b,
+    stablelm_3b,
+    minicpm3_4b,
+    qwen2_5_3b,
+    deepseek_v2_236b,
+    arctic_480b,
+    rwkv6_1_6b,
+    zamba2_2_7b,
+    whisper_base,
+    onerec_gr,
+)
+
+REGISTRY: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        internlm2_1_8b,
+        qwen2_vl_72b,
+        stablelm_3b,
+        minicpm3_4b,
+        qwen2_5_3b,
+        deepseek_v2_236b,
+        arctic_480b,
+        rwkv6_1_6b,
+        zamba2_2_7b,
+        whisper_base,
+        onerec_gr,
+    )
+}
+
+ASSIGNED = [
+    "internlm2-1.8b",
+    "qwen2-vl-72b",
+    "stablelm-3b",
+    "minicpm3-4b",
+    "qwen2.5-3b",
+    "deepseek-v2-236b",
+    "arctic-480b",
+    "rwkv6-1.6b",
+    "zamba2-2.7b",
+    "whisper-base",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown architecture {name!r}; have {sorted(REGISTRY)}") from None

@@ -1,0 +1,27 @@
+"""Snowflake Arctic 480B — dense-MoE hybrid: every layer has a parallel dense
+FFN residual plus a 128-expert top-2 routed MoE [hf:Snowflake/snowflake-arctic-base]."""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,                 # dense residual FFN width
+    vocab_size=32000,
+    attention_kind="gqa",
+    rope_kind="rope",
+    rope_theta=1_000_000.0,
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    moe_num_experts=128,
+    moe_top_k=2,
+    moe_d_ff=4864,
+    moe_dense_residual=True,   # Arctic's dense + MoE parallel structure
+    sliding_window=8192,
+)

@@ -1,0 +1,37 @@
+"""DeepSeek-V2 236B — MoE (160 routed experts top-6, 2 shared) with MLA
+(kv_lora_rank=512) [arXiv:2405.04434].
+
+First layer is dense (d_ff=12288); remaining 59 layers are MoE with
+per-expert d_ff=1536.  MLA latents are the KV cache.
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,
+    head_dim=192,              # qk_nope(128) + qk_rope(64)
+    d_ff=12288,                # dense (first) layer FFN width
+    vocab_size=102400,
+    attention_kind="mla",
+    mla_q_lora_rank=1536,
+    mla_kv_lora_rank=512,
+    mla_qk_nope_head_dim=128,
+    mla_qk_rope_head_dim=64,
+    mla_v_head_dim=128,
+    rope_kind="rope",
+    rope_theta=10000.0,
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    moe_num_experts=160,
+    moe_top_k=6,
+    moe_d_ff=1536,
+    moe_num_shared_experts=2,
+    moe_first_dense_layers=1,
+    sliding_window=8192,
+)

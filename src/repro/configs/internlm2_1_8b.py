@@ -1,0 +1,22 @@
+"""InternLM2-1.8B — dense GQA decoder [arXiv:2403.17297]."""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    source="arXiv:2403.17297",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92544,
+    attention_kind="gqa",
+    rope_kind="rope",
+    rope_theta=1_000_000.0,
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    sliding_window=8192,   # serving variant enabling the long_500k decode shape
+)

@@ -1,0 +1,34 @@
+"""MiniCPM3-4B — dense decoder with Multi-head Latent Attention (MLA)
+[hf:openbmb/MiniCPM3-4B].
+
+MLA compresses KV into a low-rank latent (kv_lora_rank); the latent IS the
+KV cache, which composes naturally with xGR's shared-cache design (the shared
+prefix cache stores latents, cutting shared-stage bytes by ~d_model/r).
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    source="hf:openbmb/MiniCPM3-4B",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=96,               # qk_nope + qk_rope
+    d_ff=6400,
+    vocab_size=73448,
+    attention_kind="mla",
+    mla_q_lora_rank=768,
+    mla_kv_lora_rank=256,
+    mla_qk_nope_head_dim=64,
+    mla_qk_rope_head_dim=32,
+    mla_v_head_dim=64,
+    rope_kind="rope",
+    rope_theta=10000.0,
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    tie_embeddings=True,
+    sliding_window=8192,
+)

@@ -1,0 +1,37 @@
+"""OneRec-style generative-recommendation model (the paper's own workload)
+[arXiv:2502.18965, paper §9: OneRec 0.1B–3B].
+
+A small decoder over a semantic-ID token space: user history is a sequence of
+item TIDs; output is a TID triplet (ND=3 decode phases) selected by wide beam
+search with valid-path constraint.  This is the model the serving benchmarks
+(Fig 13/14/18 analogues) run end-to-end on CPU.
+"""
+
+from repro.config import ModelConfig, GRConfig
+
+CONFIG = ModelConfig(
+    name="onerec-0.1b",
+    family="dense",
+    source="arXiv:2502.18965",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=8192,           # per-level TID vocabulary
+    attention_kind="gqa",
+    rope_kind="rope",
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    tie_embeddings=True,
+    max_position=8192,
+)
+
+GR = GRConfig(
+    beam_width=128,
+    top_k=128,
+    num_decode_phases=3,
+    num_items=100_000,
+    tid_vocab=8192,
+)

@@ -1,0 +1,25 @@
+"""Qwen2.5 3B-class dense decoder — extreme GQA (kv=2), QKV bias
+[hf:Qwen/Qwen2.5-0.5B]."""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151936,
+    attention_kind="gqa",
+    qkv_bias=True,
+    rope_kind="rope",
+    rope_theta=1_000_000.0,
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    tie_embeddings=True,
+    sliding_window=8192,
+)

@@ -1,0 +1,30 @@
+"""Qwen2-VL-72B language backbone — VLM with M-RoPE [arXiv:2409.12191].
+
+The ViT vision encoder + merger is a STUB per the assignment: ``input_specs``
+provides precomputed patch embeddings of shape (batch, vision_tokens,
+d_model); the backbone interleaves them with text-token embeddings and applies
+M-RoPE (temporal/height/width 3-axis rotary positions).
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    attention_kind="gqa",
+    qkv_bias=True,              # Qwen2 QKV bias
+    rope_kind="mrope",          # multimodal 3-axis rotary
+    rope_theta=1_000_000.0,
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    vision_tokens=1024,         # stub patch-embedding budget (dynamic resolution)
+    sliding_window=8192,
+)

@@ -1,0 +1,29 @@
+"""RWKV-6 "Finch" 1.6B — attention-free RNN with data-dependent decay
+[arXiv:2404.05892].
+
+No KV cache exists, so xAttention's shared/unshared split is inapplicable
+(see DESIGN.md §Arch-applicability): beam forking copies the O(1)-per-token
+recurrent state instead.  xBeam and xSchedule apply unchanged.  State size is
+constant in prompt length, so the long_500k decode shape runs natively.
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    source="arXiv:2404.05892",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,              # 2048 / head_size 64
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab_size=65536,
+    attention_kind="none",
+    rope_kind="none",
+    norm_kind="layernorm",
+    act_kind="gelu",           # rwkv channel-mix uses squared relu; see models/rwkv.py
+    ssm_state_dim=64,          # wkv head size
+    ssm_head_dim=64,
+)

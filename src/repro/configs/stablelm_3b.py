@@ -1,0 +1,26 @@
+"""StableLM-2 3B-class dense decoder [hf:stabilityai/stablelm-2-1_6b].
+
+LayerNorm + partial rotary embeddings (25% of head_dim), MHA (kv == heads).
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    source="hf:stabilityai/stablelm-2-1_6b",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=50304,
+    attention_kind="gqa",
+    rope_kind="rope",
+    rope_theta=10000.0,
+    rope_fraction=0.25,        # partial rotary per model card
+    norm_kind="layernorm",
+    act_kind="swiglu",
+    sliding_window=8192,
+)

@@ -1,0 +1,32 @@
+"""Whisper-base — encoder-decoder audio model [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (batch, encoder_seq,
+d_model).  We implement the transformer encoder + decoder (cross-attention).
+Cross-attention KV derives purely from the prompt (encoder output) and never
+grows — under xGR it lives entirely in the shared cache; decoder self-attn KV
+is the unshared per-beam part.
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    source="arXiv:2212.04356",
+    num_layers=6,              # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    attention_kind="gqa",
+    rope_kind="learned",       # whisper uses learned positions
+    norm_kind="layernorm",
+    act_kind="gelu",
+    encoder_layers=6,
+    encoder_seq=1500,
+    max_position=524288,       # stress shapes exceed whisper's natural 448 ctx
+    sliding_window=4096,       # synthetic long-decode stress only
+)

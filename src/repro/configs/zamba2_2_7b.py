@@ -1,0 +1,30 @@
+"""Zamba2-2.7B — hybrid: Mamba2 backbone + a shared (weight-tied) attention
+block applied every few layers [arXiv:2411.15242].
+
+The Mamba2 blocks fork SSM state on beam branching; the shared attention
+block has a true KV cache and uses xAttention's shared/unshared split.
+"""
+
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    attention_kind="gqa",
+    rope_kind="rope",
+    norm_kind="rmsnorm",
+    act_kind="swiglu",
+    ssm_state_dim=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    hybrid_attn_every=6,       # shared attention block every 6 mamba blocks
+    sliding_window=4096,       # the shared-attn block uses a window for long_500k
+)

@@ -1,0 +1,25 @@
+"""xGR core — the paper's primary contribution in JAX.
+
+Separated KV cache (xAttention §5.1), staged beam attention (§5.2),
+xBeam search + valid-path constraint (§6), and the integrated GR
+generate loop used by the serving engine.
+"""
+
+from repro.core.gr_decode import GRDecoder
+from repro.core.item_trie import ItemTrie, MaskWorkspace
+from repro.core.kv_cache import (SeparatedCache, fork_and_append,
+                                 init_separated_cache, make_inplace_plan,
+                                 two_pass_schedule, write_prefill)
+from repro.core.xattention import (full_reference_attention,
+                                   paged_beam_attention,
+                                   staged_beam_attention)
+from repro.core.xbeam import (BeamState, beam_step, host_beam_select,
+                              init_beam_state, naive_beam_select)
+
+__all__ = [
+    "GRDecoder", "ItemTrie", "MaskWorkspace", "SeparatedCache",
+    "fork_and_append", "init_separated_cache", "make_inplace_plan",
+    "two_pass_schedule", "write_prefill", "full_reference_attention",
+    "paged_beam_attention", "staged_beam_attention", "BeamState",
+    "beam_step", "host_beam_select", "init_beam_state", "naive_beam_select",
+]

@@ -1,0 +1,195 @@
+"""End-to-end GR generation: one prefill + ND × (beam search + decode).
+
+This is the engine-facing integration of the paper's three components for
+dense-GQA GR models (OneRec-style):
+
+  prefill         — prompt forward, KV installed once into the shared cache
+  beam phase d    — xBeam expansion with valid-path masks (dense at d=0,
+                    trie-derived at d>0)
+  decode phase d  — one token per beam; staged xAttention against the
+                    separated cache; unshared cache forked by parent index
+
+Two execution modes mirror the paper's xSchedule ablation:
+  * ``graph``  — the whole ND-phase loop is one jitted XLA program using
+    device-resident masks (paper's kernel-graph dispatch + §9.5 device
+    filtering).  One dispatch per request batch.
+  * ``eager``  — per-phase jitted calls with *host* mask generation between
+    them (the overlap-structured path; in the simulator the host mask time
+    can overlap the device forward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import GRConfig, ModelConfig
+from repro.core import xbeam
+from repro.core.item_trie import ItemTrie
+from repro.core.kv_cache import SeparatedCache, init_separated_cache, write_prefill
+from repro.core.xattention import paged_beam_attention, staged_beam_attention
+from repro.models.attention import gqa_qkv
+from repro.models.common import apply_norm, dense
+from repro.models.mlp import apply_mlp
+from repro.models.model import TransformerModel
+from repro.models.rope import apply_rope, rope_angles
+
+
+class GRDecoder:
+    """GR serving decoder over a dense-GQA ``TransformerModel``."""
+
+    def __init__(self, cfg: ModelConfig, gr: GRConfig,
+                 trie: Optional[ItemTrie] = None,
+                 attention_impl: str = "staged"):
+        assert cfg.attention_kind == "gqa", "GR decoder requires GQA models"
+        self.cfg = cfg
+        self.gr = gr
+        self.trie = trie
+        assert attention_impl in ("staged", "paged", "kernel")
+        self.attention_impl = attention_impl
+        self.model = TransformerModel(cfg)
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params, tokens: jax.Array, lengths: jax.Array,
+                dtype=jnp.float32) -> Tuple[jax.Array, SeparatedCache]:
+        """tokens (R, S) right-padded; lengths (R,).  Returns (logits (R,V),
+        separated cache with the shared side installed)."""
+        R, S = tokens.shape
+        cache0 = self.model.init_cache(R, S, dtype)
+        logits, filled = self.model.prefill(
+            params, {"tokens": tokens, "lengths": lengths}, cache0)
+        sep = init_separated_cache(self.cfg, self.gr, R, S, dtype)
+        sep = write_prefill(sep, filled["dense"]["k"], filled["dense"]["v"],
+                            lengths)
+        return logits, sep
+
+    # -------------------------------------------------------- decode phase
+    def _attend(self, q, sk, sv, slen, uk, uv, dstep):
+        if self.attention_impl == "paged":
+            return paged_beam_attention(q, sk, sv, slen, uk, uv, dstep)
+        if self.attention_impl == "kernel":
+            from repro.kernels.beam_attn.ops import beam_attention
+            return beam_attention(q, sk, sv, slen, uk, uv, dstep)
+        return staged_beam_attention(q, sk, sv, slen, uk, uv, dstep)
+
+    def decode_step(self, params, prev_tokens: jax.Array, parent: jax.Array,
+                    cache: SeparatedCache
+                    ) -> Tuple[jax.Array, SeparatedCache]:
+        """One decode phase.
+
+        prev_tokens : (R, BW) tokens selected by the preceding beam phase
+        parent      : (R, BW) beam fork indices from that phase
+        Returns (logits (R, BW, V), updated cache)."""
+        cfg, gr = self.cfg, self.gr
+        R, BW = prev_tokens.shape
+        dstep = cache.step                       # unshared slot to write
+        x = params["embed"][prev_tokens]         # (R, BW, d)
+        hd = cfg.resolved_head_dim
+        rot = int(hd * cfg.rope_fraction) & ~1
+        pos = (cache.shared_len + dstep)[:, None]          # (R,1)
+        cos, sin = rope_angles(pos, rot, cfg.rope_theta)
+
+        def layer_body(h, xs):
+            lp, sk, sv, uk, uv = xs
+            hn = apply_norm(lp["ln1"], h, cfg.norm_kind, cfg.norm_eps)
+            q, k, v = gqa_qkv(lp["attn"], hn, cfg)
+            if cfg.rope_kind == "rope":
+                q = apply_rope(q, cos, sin, cfg.rope_fraction)
+                k = apply_rope(k, cos, sin, cfg.rope_fraction)
+            # fork (gather by parent) + token-granularity append at dstep
+            idx = parent[:, :, None, None, None]
+            uk = jnp.take_along_axis(uk, idx, axis=1)
+            uv = jnp.take_along_axis(uv, idx, axis=1)
+            uk = jax.lax.dynamic_update_slice_in_dim(
+                uk, k[:, :, None].astype(uk.dtype), dstep, axis=2)
+            uv = jax.lax.dynamic_update_slice_in_dim(
+                uv, v[:, :, None].astype(uv.dtype), dstep, axis=2)
+            a = self._attend(q, sk, sv, cache.shared_len, uk, uv, dstep)
+            h = h + dense(a.reshape(R, BW, -1), lp["attn"]["wo"])
+            h = h + apply_mlp(lp["mlp"],
+                              apply_norm(lp["ln2"], h, cfg.norm_kind,
+                                         cfg.norm_eps), cfg.act_kind)
+            return h, (uk, uv)
+
+        x, (uk, uv) = jax.lax.scan(
+            layer_body, x,
+            (params["dense_layers"], cache.shared_k, cache.shared_v,
+             cache.unshared_k, cache.unshared_v))
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = self.model._logits(params, x).astype(jnp.float32)
+        new_cache = dataclasses.replace(cache, unshared_k=uk, unshared_v=uv,
+                                        step=dstep + 1)
+        return logits, new_cache
+
+    # ------------------------------------------------------------ generate
+    def generate(self, params, tokens: jax.Array, lengths: jax.Array,
+                 mode: str = "graph", dtype=jnp.float32,
+                 workspace=None) -> Dict[str, jax.Array]:
+        """Full GR inference for a batch of R requests.
+
+        mode='graph': single jitted program, device-resident masks.
+        mode='eager': per-phase dispatch with host (numpy) mask generation.
+        Returns {"items": (R,BW,ND) int32, "log_probs": (R,BW) f32}."""
+        if mode == "graph":
+            return self._generate_graph(params, tokens, lengths, dtype=dtype)
+        return self._generate_eager(params, tokens, lengths, dtype, workspace)
+
+    @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("dtype",))
+    def _generate_graph(self, params, tokens, lengths, dtype=jnp.float32):
+        gr = self.gr
+        R = tokens.shape[0]
+        logits0, cache = self.prefill(params, tokens, lengths, dtype)
+        state = xbeam.init_beam_state(R, gr)
+        mask0 = (self.trie.device_mask0()[None, None]
+                 if self.trie is not None else jnp.float32(0.0))
+        logits = jnp.broadcast_to(logits0[:, None, :],
+                                  (R, gr.beam_width, self.cfg.vocab_size))
+        state, parent = xbeam.beam_step(state, logits, mask0, gr)
+        for d in range(1, gr.num_decode_phases):
+            prev = state.tokens[:, :, d - 1]
+            logits, cache = self.decode_step(params, prev, parent, cache)
+            if self.trie is not None:
+                mask = self.trie.device_masks(d, state.tokens[:, :, :d])
+            else:
+                mask = jnp.float32(0.0)
+            state, parent = xbeam.beam_step(state, logits, mask, gr)
+        return {"items": state.tokens, "log_probs": state.log_probs}
+
+    def _generate_eager(self, params, tokens, lengths, dtype, workspace):
+        gr = self.gr
+        R = tokens.shape[0]
+        prefill = jax.jit(lambda p, t, l: self.prefill(p, t, l, dtype))
+        step = jax.jit(self.decode_step, donate_argnums=(3,))
+        bstep = jax.jit(functools.partial(xbeam.beam_step, gr=self.gr))
+
+        logits0, cache = prefill(params, tokens, lengths)
+        state = xbeam.init_beam_state(R, gr)
+        if self.trie is not None:
+            mask0 = jnp.asarray(self.trie.host_masks(0, None))[None, None]
+        else:
+            mask0 = jnp.float32(0.0)
+        logits = jnp.broadcast_to(logits0[:, None, :],
+                                  (R, gr.beam_width, self.cfg.vocab_size))
+        state, parent = bstep(state, logits, mask0)
+        for d in range(1, gr.num_decode_phases):
+            prev = state.tokens[:, :, d - 1]
+            logits, cache = step(params, prev, parent, cache)
+            if self.trie is not None:
+                prefix = np.asarray(state.tokens[:, :, :d])
+                if workspace is not None:
+                    m = (workspace.sparse_update(self.trie, d, prefix)
+                         if d == gr.num_decode_phases - 1 else
+                         workspace.dense_fill(self.trie, d, prefix))
+                else:
+                    m = self.trie.host_masks(d, prefix)
+                mask = jnp.asarray(m)
+            else:
+                mask = jnp.float32(0.0)
+            state, parent = bstep(state, logits, mask)
+        return {"items": state.tokens, "log_probs": state.log_probs}

@@ -1,0 +1,182 @@
+"""Valid-path constraint over the item space (paper §6.1, xBeam).
+
+Items are token-ID tuples (TID triplets for ND=3).  Not every TID combination
+names a real item, so beam expansion must mask invalid continuations.  The
+trie is stored as *per-level sorted compact-key arrays*:
+
+  level 1:  A1 = sorted unique t0                     (first-token dense mask
+            is precomputed at load time — the paper's "dense storage")
+  level d:  A_d = sorted keys  parent_id * V + t_{d-1},  where parent_id is
+            the index of the (d-1)-prefix in A_{d-1}
+
+Compact parent ids keep every key within int32 (no x64 requirement) while
+supporting vocab 8192 and 10^5+ items.
+
+Two mask-generation paths, both exercised by the serving engine:
+  * ``host_masks``   — numpy, used by xSchedule to overlap mask generation
+                       with the device forward pass (paper §7), with a
+                       reused workspace and sparse in-place updates for the
+                       small final-step masks (paper's sparse storage);
+  * ``device_masks`` — jittable searchsorted membership, the "fully
+                       device-resident" variant of paper §9.5, used inside
+                       the graph-dispatched generate loop.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MASK_NEG = -1e9
+
+
+class ItemTrie:
+    def __init__(self, items: np.ndarray, vocab: int):
+        """items: (N, ND) int array of token-id tuples; invalid rows deduped."""
+        items = np.unique(np.asarray(items, np.int64), axis=0)
+        assert items.ndim == 2
+        self.nd = items.shape[1]
+        self.vocab = int(vocab)
+        assert items.max() < vocab
+        self.items = items
+
+        # per-level sorted compact-key arrays
+        self.levels: List[np.ndarray] = []
+        parent_ids = np.zeros(items.shape[0], np.int64)
+        for d in range(self.nd):
+            keys = parent_ids * vocab + items[:, d]
+            level = np.unique(keys)
+            self.levels.append(level.astype(np.int64))
+            parent_ids = np.searchsorted(level, keys)
+        # dense first-level mask, precomputed at "model load" time
+        self.dense_mask0 = np.full((vocab,), MASK_NEG, np.float32)
+        self.dense_mask0[self.levels[0]] = 0.0
+        # device copies
+        self._dev_levels = [jnp.asarray(np.minimum(l, 2**31 - 1).astype(np.int32))
+                            for l in self.levels]
+        self._dev_mask0 = jnp.asarray(self.dense_mask0)
+
+    # ------------------------------------------------------------- host path
+    def prefix_ids(self, tokens: np.ndarray) -> np.ndarray:
+        """tokens: (..., d) prefix tokens -> compact prefix ids (...,).
+
+        Invalid prefixes map to -1."""
+        tokens = np.asarray(tokens, np.int64)
+        d = tokens.shape[-1]
+        pid = np.zeros(tokens.shape[:-1], np.int64)
+        ok = np.ones(tokens.shape[:-1], bool)
+        for i in range(d):
+            keys = pid * self.vocab + tokens[..., i]
+            idx = np.searchsorted(self.levels[i], keys)
+            idx = np.minimum(idx, len(self.levels[i]) - 1)
+            ok &= self.levels[i][idx] == keys
+            pid = idx
+        return np.where(ok, pid, -1)
+
+    def host_masks(self, step: int, prefix_tokens: Optional[np.ndarray],
+                   out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Additive masks for decode phase ``step``.
+
+        step == 0: returns the precomputed dense (V,) mask (no prefixes).
+        step >= 1: prefix_tokens (R, BW, step) -> (R, BW, V) masks written
+        into ``out`` (reused workspace) when provided.
+        """
+        if step == 0:
+            return self.dense_mask0
+        pid = self.prefix_ids(prefix_tokens)              # (R, BW)
+        R, BW = pid.shape
+        if out is None:
+            out = np.empty((R, BW, self.vocab), np.float32)
+        out.fill(MASK_NEG)
+        level = self.levels[step]
+        flat_pid = pid.reshape(-1)
+        flat = out.reshape(R * BW, self.vocab)
+        for i, p in enumerate(flat_pid):
+            if p < 0:
+                continue
+            lo = np.searchsorted(level, p * self.vocab)
+            hi = np.searchsorted(level, (p + 1) * self.vocab)
+            flat[i, level[lo:hi] - p * self.vocab] = 0.0
+        return out
+
+    # ----------------------------------------------------------- device path
+    def device_mask0(self) -> jax.Array:
+        return self._dev_mask0
+
+    def device_masks(self, step: int, prefix_tokens: jax.Array) -> jax.Array:
+        """Jittable masks: prefix_tokens (R, BW, step) int32 -> (R, BW, V).
+
+        Compact keys stay < 2^31 because parent ids are level indices."""
+        assert step >= 1
+        V = self.vocab
+        pid = jnp.zeros(prefix_tokens.shape[:-1], jnp.int32)
+        ok = jnp.ones(prefix_tokens.shape[:-1], bool)
+        for i in range(step):
+            level = self._dev_levels[i]
+            keys = pid * V + prefix_tokens[..., i]
+            idx = jnp.clip(jnp.searchsorted(level, keys), 0, level.shape[0] - 1)
+            ok &= level[idx] == keys
+            pid = idx.astype(jnp.int32)
+        level = self._dev_levels[step]
+        cand = pid[..., None] * V + jnp.arange(V, dtype=jnp.int32)
+        idx = jnp.clip(jnp.searchsorted(level, cand.reshape(-1)), 0,
+                       level.shape[0] - 1).reshape(cand.shape)
+        valid = (level[idx] == cand) & ok[..., None]
+        return jnp.where(valid, 0.0, MASK_NEG).astype(jnp.float32)
+
+
+class MaskWorkspace:
+    """Reused host mask buffers (paper §6.3 data-structure reuse).
+
+    One workspace per engine stream: buffers are allocated once at the max
+    (R, BW) and rewritten in place each decode phase.  ``sparse_update``
+    additionally demonstrates the paper's final-step sparse path: instead of
+    refilling the whole buffer it undoes only the previously-set valid
+    positions, then sets the new ones (cheap when valid sets are small).
+    """
+
+    def __init__(self, max_requests: int, beam_width: int, vocab: int):
+        self.buf = np.full((max_requests, beam_width, vocab), MASK_NEG,
+                           np.float32)
+        self.beam_width = beam_width
+        self._prev_pos: List[Tuple[int, np.ndarray]] = []
+
+    def _write(self, trie: ItemTrie, step: int,
+               prefix_tokens: np.ndarray) -> np.ndarray:
+        """Scatter valid positions for (R, BW, step) prefixes, recording every
+        write so the next call can undo it in place."""
+        R, BW = prefix_tokens.shape[:2]
+        assert BW == self.beam_width
+        pid = trie.prefix_ids(prefix_tokens).reshape(-1)
+        level = trie.levels[step]
+        V = trie.vocab
+        view = self.buf[:R].reshape(R * BW, V)
+        for i, p in enumerate(pid):
+            if p < 0:
+                continue
+            lo = np.searchsorted(level, p * V)
+            hi = np.searchsorted(level, (p + 1) * V)
+            pos = level[lo:hi] - p * V
+            view[i, pos] = 0.0
+            self._prev_pos.append((i, pos))
+        return self.buf[:R]
+
+    def dense_fill(self, trie: ItemTrie, step: int,
+                   prefix_tokens: np.ndarray) -> np.ndarray:
+        """Full rewrite: clear the whole (reused) buffer, then scatter."""
+        self.buf.fill(MASK_NEG)
+        self._prev_pos = []
+        return self._write(trie, step, prefix_tokens)
+
+    def sparse_update(self, trie: ItemTrie, step: int,
+                      prefix_tokens: np.ndarray) -> np.ndarray:
+        """In-place update: undo only the previously-set valid positions
+        (cheap when valid sets are small — the paper's final-step path)."""
+        flat = self.buf.reshape(-1, self.buf.shape[-1])
+        for i, pos in self._prev_pos:
+            flat[i, pos] = MASK_NEG
+        self._prev_pos = []
+        return self._write(trie, step, prefix_tokens)

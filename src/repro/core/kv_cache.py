@@ -1,0 +1,234 @@
+"""xAttention separated KV cache (paper §5.1).
+
+The cache is split into
+  * a **shared cache** — the prompt KV written once at prefill and never
+    touched again; every beam of a request reads the same physical copy, and
+  * an **unshared cache** — exactly ``BW × ND`` token slots per request,
+    managed at *token* granularity (no block alignment, no copy-on-fork).
+
+Beam forking becomes a gather of the unshared cache rows by parent index.
+Under ``jax.jit`` with buffer donation this compiles to an aliased in-place
+permutation — the functional analogue of the paper's in-place block update.
+
+The paper's *direct-index* two-pass in-place update schedule (Fig 8) targets
+imperative accelerators where a single physical buffer is rewritten.  We keep
+a faithful host-side implementation (``two_pass_schedule`` /
+``make_inplace_plan``) which the serving engine's host planner uses, with
+property tests proving plan-execution == gather.  Because beam "parent maps"
+may contain duplicates and cross-direction read/write hazards, the two-pass
+schedule alone is not universally sufficient; ``make_inplace_plan`` falls
+back to a topological order with minimal spill copies when needed (documented
+deviation — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import GRConfig, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Device-side separated cache (functional)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SeparatedCache:
+    """Layer-stacked separated KV cache for a batch of R requests.
+
+    shared_k/v   : (L, R, S_max, kvH, hd)
+    shared_len   : (R,) int32 — per-request prompt length
+    unshared_k/v : (L, R, BW, ND, kvH, hd)
+    step         : () int32 — decode phase counter (0..ND)
+    """
+
+    shared_k: jax.Array
+    shared_v: jax.Array
+    shared_len: jax.Array
+    unshared_k: jax.Array
+    unshared_v: jax.Array
+    step: jax.Array
+
+    def tree_flatten(self):
+        return ((self.shared_k, self.shared_v, self.shared_len,
+                 self.unshared_k, self.unshared_v, self.step), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return self.shared_k.shape[0]
+
+    @property
+    def beam_width(self) -> int:
+        return self.unshared_k.shape[2]
+
+    @property
+    def nd(self) -> int:
+        return self.unshared_k.shape[3]
+
+
+def init_separated_cache(cfg: ModelConfig, gr: GRConfig, requests: int,
+                         prompt_len: int, dtype=jnp.float32,
+                         abstract: bool = False) -> SeparatedCache:
+    L = cfg.num_layers
+    kvH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    BW, ND = gr.beam_width, gr.num_decode_phases
+
+    def arr(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    return SeparatedCache(
+        shared_k=arr((L, requests, prompt_len, kvH, hd), dtype),
+        shared_v=arr((L, requests, prompt_len, kvH, hd), dtype),
+        shared_len=arr((requests,), jnp.int32),
+        unshared_k=arr((L, requests, BW, ND, kvH, hd), dtype),
+        unshared_v=arr((L, requests, BW, ND, kvH, hd), dtype),
+        step=arr((), jnp.int32),
+    )
+
+
+def write_prefill(cache: SeparatedCache, ks: jax.Array, vs: jax.Array,
+                  lengths: jax.Array) -> SeparatedCache:
+    """Install prompt KV (L,R,S,kvH,hd) into the shared cache."""
+    S = ks.shape[2]
+    S_max = cache.shared_k.shape[2]
+    if S < S_max:
+        pad = [(0, 0)] * 5
+        pad[2] = (0, S_max - S)
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+    return dataclasses.replace(
+        cache, shared_k=ks.astype(cache.shared_k.dtype),
+        shared_v=vs.astype(cache.shared_v.dtype),
+        shared_len=lengths.astype(jnp.int32),
+        step=jnp.int32(0))
+
+
+def fork_and_append(cache: SeparatedCache, parent: jax.Array,
+                    new_k: jax.Array, new_v: jax.Array) -> SeparatedCache:
+    """Beam fork + token append, the xAttention unshared-cache update.
+
+    parent        : (R, BW) int32 — beam b of request r continues parent[r,b]
+    new_k / new_v : (L, R, BW, kvH, hd) — KV of the token just decoded
+
+    The gather-by-parent is XLA's functional form of the paper's in-place
+    permutation; with donated buffers it lowers to an aliased update.  The
+    append writes at token slot ``step`` — token granularity, no block copy.
+    """
+    step = cache.step
+
+    def regather(u):  # (L,R,BW,ND,kvH,hd) gathered on beam axis
+        return jnp.take_along_axis(
+            u, parent[None, :, :, None, None, None], axis=2)
+
+    uk = regather(cache.unshared_k)
+    uv = regather(cache.unshared_v)
+    uk = jax.lax.dynamic_update_slice_in_dim(
+        uk, new_k[:, :, :, None].astype(uk.dtype), step, axis=3)
+    uv = jax.lax.dynamic_update_slice_in_dim(
+        uv, new_v[:, :, :, None].astype(uv.dtype), step, axis=3)
+    return dataclasses.replace(cache, unshared_k=uk, unshared_v=uv,
+                               step=step + 1)
+
+
+# ---------------------------------------------------------------------------
+# Host-side in-place update planning (paper Fig 8, faithful + corrected)
+# ---------------------------------------------------------------------------
+
+Move = Tuple[int, int]          # (dst, src)
+
+
+def two_pass_schedule(parent: Sequence[int]) -> Tuple[List[Move], List[Move]]:
+    """The paper's direct-index schedule.
+
+    Writes with direction -1 ("upward": dst < src) are executed first in
+    ascending-dst order; writes with direction +1 ("downward": dst > src)
+    follow in descending-dst order.  Within each class this is hazard-free;
+    see ``is_two_pass_safe`` for the cross-class condition.
+    """
+    ups = sorted([(d, s) for d, s in enumerate(parent) if d < s])
+    downs = sorted([(d, s) for d, s in enumerate(parent) if d > s],
+                   reverse=True)
+    return ups, downs
+
+
+def is_two_pass_safe(parent: Sequence[int]) -> bool:
+    """True iff the two-pass schedule alone reproduces the gather."""
+    ups, downs = two_pass_schedule(parent)
+    up_dsts = {d for d, _ in ups}
+    # an upward write clobbers dst; any downward write reading that dst as
+    # its src sees stale data (cross-class hazard)
+    return not any(s in up_dsts for _, s in downs)
+
+
+def make_inplace_plan(parent: Sequence[int]
+                      ) -> Tuple[List[Move], List[Tuple[int, int]]]:
+    """Hazard-free in-place execution plan for an arbitrary parent map.
+
+    Returns (ordered moves, spills) where ``spills`` is a list of
+    (spill_slot, src) pre-copies into a scratch area; moves may reference
+    spilled sources as (dst, -1 - spill_slot).
+
+    Algorithm: topological order on the read-before-write constraint graph
+    (move A must precede move B if A reads the slot B writes); each cycle is
+    broken with one spill.  For parent maps where the paper's two-pass
+    schedule is safe, this degenerates to an equivalent order with zero
+    spills.
+    """
+    order: List[Move] = []
+    spills: List[Tuple[int, int]] = []
+    remaining: Dict[int, Move] = {d: (d, s) for d, s in enumerate(parent)
+                                  if d != s}
+
+    # dependency: move (d,s) cannot run until every move reading slot d has
+    # run (they need d's ORIGINAL content).  Kahn's algorithm; cycles are
+    # broken by spilling the contested destination's current content and
+    # redirecting its readers to the spill slot.
+    while remaining:
+        progressed = False
+        for d in sorted(list(remaining)):
+            dm, sm = remaining[d]
+            still_read = any(ss == dm for dd, (_, ss) in remaining.items()
+                             if dd != d)
+            if not still_read:
+                order.append((dm, sm))
+                del remaining[d]
+                progressed = True
+        if not progressed:
+            d = sorted(remaining)[0]
+            slot = len(spills)
+            spills.append((slot, d))         # preserve d's original content
+            for dd, (dm2, ss) in list(remaining.items()):
+                if ss == d:
+                    remaining[dd] = (dm2, -1 - slot)
+    return order, spills
+
+
+def execute_plan(buf: np.ndarray, plan: List[Move],
+                 spills: List[Tuple[int, int]]) -> np.ndarray:
+    """Apply an in-place plan to a (BW, ...) numpy buffer (mutates)."""
+    scratch = [buf[s].copy() for _, s in spills]
+    for d, s in plan:
+        buf[d] = scratch[-1 - s] if s < 0 else buf[s]
+    return buf
+
+
+def execute_two_pass(buf: np.ndarray, parent: Sequence[int]) -> np.ndarray:
+    """Apply the paper's two-pass schedule (only valid when safe)."""
+    ups, downs = two_pass_schedule(parent)
+    for d, s in ups:
+        buf[d] = buf[s]
+    for d, s in downs:
+        buf[d] = buf[s]
+    return buf

@@ -1,0 +1,6 @@
+from repro.data.items import gen_catalog, item_popularity
+from repro.data.synthetic import (GRRequest, gen_histories, poisson_trace,
+                                  powerlaw_lengths, train_batches)
+
+__all__ = ["gen_catalog", "item_popularity", "GRRequest", "gen_histories",
+           "poisson_trace", "powerlaw_lengths", "train_batches"]

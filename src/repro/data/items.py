@@ -1,0 +1,43 @@
+"""Item catalog generation: TID-tuple semantic ids with a skewed popularity
+distribution (mirrors the paper's Amazon-Review / JD-trace item spaces)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def gen_catalog(num_items: int, vocab: int, nd: int = 3,
+                seed: int = 0) -> np.ndarray:
+    """Returns (num_items, nd) unique TID tuples.
+
+    Token usage per level is Zipf-skewed (popular prefixes get more
+    children), so the trie is realistically unbalanced."""
+    rng = np.random.default_rng(seed)
+    items = set()
+    out = np.empty((num_items, nd), np.int64)
+    n = 0
+    # zipf-ish: sample token ids via pareto-shaped floats mapped into vocab
+    while n < num_items:
+        batch = max(1024, num_items - n)
+        raw = rng.pareto(1.2, size=(batch, nd))
+        toks = (raw / (raw + 1.0) * vocab).astype(np.int64) % vocab
+        for row in toks:
+            t = tuple(row)
+            if t not in items:
+                items.add(t)
+                out[n] = row
+                n += 1
+                if n == num_items:
+                    break
+    return out
+
+
+def item_popularity(num_items: int, seed: int = 1) -> np.ndarray:
+    """Zipf popularity over catalog indices (for history sampling)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, num_items + 1, dtype=np.float64)
+    p = 1.0 / ranks ** 1.1
+    rng.shuffle(p)
+    return p / p.sum()

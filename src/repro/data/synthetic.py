@@ -1,0 +1,78 @@
+"""Synthetic GR workload: user behaviour histories and request traces.
+
+Histories are sequences of item TID-tuples flattened to token streams; their
+lengths follow a (truncated) power law — the paper's "tens to thousands of
+tokens" request-size distribution (§7).  Request arrivals are Poisson at a
+target RPS (§9 experiments sweep RPS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import GRConfig
+from repro.data.items import item_popularity
+
+
+@dataclasses.dataclass
+class GRRequest:
+    rid: int
+    tokens: np.ndarray          # (len,) int32 history token stream
+    arrival_s: float
+    target_item: Optional[np.ndarray] = None   # (nd,) next item (training)
+
+
+def powerlaw_lengths(n: int, lo: int, hi: int, alpha: float = 1.5,
+                     seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    u = rng.random(n)
+    x = lo * (1 - u) ** (-1.0 / (alpha - 1.0))
+    return np.clip(x.astype(np.int64), lo, hi)
+
+
+def gen_histories(catalog: np.ndarray, n_users: int, max_tokens: int,
+                  min_tokens: int = 12, seed: int = 0
+                  ) -> List[np.ndarray]:
+    """Per-user token streams: popularity-sampled items, flattened TIDs."""
+    rng = np.random.default_rng(seed)
+    nd = catalog.shape[1]
+    pop = item_popularity(catalog.shape[0], seed + 1)
+    lens = powerlaw_lengths(n_users, min_tokens, max_tokens, seed=seed + 2)
+    out = []
+    for L in lens:
+        n_items = max(2, int(L) // nd)
+        idx = rng.choice(catalog.shape[0], size=n_items, p=pop)
+        out.append(catalog[idx].reshape(-1).astype(np.int32))
+    return out
+
+
+def poisson_trace(histories: List[np.ndarray], rps: float,
+                  duration_s: float, seed: int = 0) -> List[GRRequest]:
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    i = 0
+    while t < duration_s:
+        t += rng.exponential(1.0 / rps)
+        h = histories[i % len(histories)]
+        reqs.append(GRRequest(rid=i, tokens=h, arrival_s=t))
+        i += 1
+    return reqs
+
+
+def train_batches(catalog: np.ndarray, batch_size: int, seq_len: int,
+                  vocab: int, seed: int = 0) -> Iterator[dict]:
+    """Next-token prediction over history streams (the GR training task)."""
+    rng = np.random.default_rng(seed)
+    pop = item_popularity(catalog.shape[0], seed + 1)
+    nd = catalog.shape[1]
+    n_items = seq_len // nd + 2
+    while True:
+        idx = rng.choice(catalog.shape[0], size=(batch_size, n_items), p=pop)
+        stream = catalog[idx].reshape(batch_size, -1).astype(np.int32)
+        tokens = stream[:, :seq_len]
+        labels = stream[:, 1:seq_len + 1]
+        yield {"tokens": tokens, "labels": labels}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for xGR's compute hot-spots.
+
+beam_attn/ — staged beam attention over the separated KV cache
+             (kernel.py: pl.pallas_call + BlockSpec; ops.py: jit'd wrapper;
+              ref.py: pure-jnp oracle; tune.py: block-shape cost model).
+"""

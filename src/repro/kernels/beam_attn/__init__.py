@@ -1,0 +1,2 @@
+from repro.kernels.beam_attn.ops import beam_attention
+from repro.kernels.beam_attn.ref import beam_attention_ref

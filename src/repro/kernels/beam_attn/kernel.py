@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: staged beam attention over a separated KV cache.
+
+This is the xAttention operator (paper §5) adapted to the TPU memory
+hierarchy (DESIGN.md §2):
+
+  * the prompt ("shared") KV streams HBM -> VMEM one (block_s, hd) tile at a
+    time; **all BW·G query rows multiply against the same resident tile**, so
+    prefix HBM traffic is paid once per request instead of once per beam —
+    the paper's redundant-load elimination, restated for the MXU;
+  * the per-beam ("unshared") KV is a dense (BW, ND, hd) token-granularity
+    buffer (no paging, no block copies) consumed in the final grid step;
+  * the shared and unshared stages keep FlashAttention-style running
+    (m, l, acc) partials in VMEM scratch and are merged with OnlineSoftmax —
+    the staged-computation-plus-merge structure of paper §5.2.  The MCU/VCU
+    pipelining the paper schedules by hand falls out of Mosaic's software
+    pipelining across grid steps.
+
+Grid: (R, kvH, nS + 1) — the innermost axis walks shared-KV tiles and ends
+with one unshared+finalize step.  Scratch persists across the innermost axis.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(slen_ref, step_ref,          # scalar-prefetch style (1,1) blocks
+            q_ref, sk_ref, sv_ref, uk_ref, uv_ref,
+            out_ref,
+            m_scr, l_scr, acc_scr,
+            *, scale: float, block_s: int, n_s_blocks: int,
+            bw: int, g: int, nd: int):
+    s_idx = pl.program_id(2)
+    M = q_ref.shape[2]                   # BW * G rows
+    hd = q_ref.shape[3]
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (M, hd)
+
+    @pl.when(s_idx < n_s_blocks)
+    def _shared_stage():
+        k = sk_ref[0, 0].astype(jnp.float32)     # (block_s, hd)
+        v = sv_ref[0, 0].astype(jnp.float32)
+        # zero padded/invalid V rows: IEEE 0*NaN = NaN would otherwise leak
+        # through the p@v contraction even where p == 0
+        row = s_idx * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (v.shape[0], 1), 0)
+        v = jnp.where(row < slen_ref[0, 0], v, 0.0)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (M, block_s)
+        col = s_idx * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, (M, block_s), 1)
+        valid = col < slen_ref[0, 0]
+        scores = jnp.where(valid, scores, NEG_INF)
+
+        m_prev = m_scr[...]                      # (M, 1)
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # explicit zero for masked columns: out-of-bounds V tiles may hold
+        # NaN padding and 0·NaN would poison the accumulator; also guards
+        # the fully-masked-block case (m_new == NEG_INF -> p would be 1)
+        p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (M, block_s)
+        alpha = jnp.exp(m_prev - m_new)          # (M, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(s_idx == n_s_blocks)
+    def _unshared_and_finalize():
+        uk = uk_ref[0, 0].astype(jnp.float32)    # (BW, ND, hd)
+        uv = uv_ref[0, 0].astype(jnp.float32)
+        qb = q.reshape(bw, g, hd)
+        scores = jax.lax.dot_general(
+            qb, uk, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale   # (BW, G, ND)
+        ncol = jax.lax.broadcasted_iota(jnp.int32, (bw, g, nd), 2)
+        uvalid = (ncol <= step_ref[0, 0]).reshape(M, nd)
+        scores = jnp.where(uvalid, scores.reshape(M, nd), NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(uvalid, jnp.exp(scores - m_new), 0.0)  # (M, ND)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pb = p.reshape(bw, g, nd)
+        o2 = jax.lax.dot_general(
+            pb, uv, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(M, hd)
+        acc = acc_scr[...] * alpha + o2
+        out_ref[0, 0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def beam_attention_kernel(q, shared_k, shared_v, shared_len,
+                          unshared_k, unshared_v, step,
+                          *, scale: float, block_s: int = 512,
+                          interpret: bool = True):
+    """Kernel-layout beam attention.
+
+    q            : (R, kvH, M, hd)   M = BW*G
+    shared_k/v   : (R, kvH, S, hd)
+    shared_len   : (R,) int32
+    unshared_k/v : (R, kvH, BW, ND, hd)
+    step         : () int32
+    -> (R, kvH, M, hd) float32
+    """
+    R, kvH, M, hd = q.shape
+    S = shared_k.shape[2]
+    BW, ND = unshared_k.shape[2], unshared_k.shape[3]
+    G = M // BW
+    block_s = min(block_s, S)
+    n_s = pl.cdiv(S, block_s)
+    grid = (R, kvH, n_s + 1)
+
+    slen = shared_len.reshape(R, 1).astype(jnp.int32)
+    step_arr = jnp.broadcast_to(step.astype(jnp.int32).reshape(1, 1), (1, 1))
+
+    kern = functools.partial(_kernel, scale=scale, block_s=block_s,
+                             n_s_blocks=n_s, bw=BW, g=G, nd=ND)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda r, h, s: (r, 0)),            # shared_len
+            pl.BlockSpec((1, 1), lambda r, h, s: (0, 0)),            # step
+            pl.BlockSpec((1, 1, M, hd), lambda r, h, s: (r, h, 0, 0)),   # q
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda r, h, s: (r, h, jnp.minimum(s, n_s - 1), 0)),
+            pl.BlockSpec((1, 1, block_s, hd),
+                         lambda r, h, s: (r, h, jnp.minimum(s, n_s - 1), 0)),
+            pl.BlockSpec((1, 1, BW, ND, hd), lambda r, h, s: (r, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, BW, ND, hd), lambda r, h, s: (r, h, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M, hd), lambda r, h, s: (r, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, kvH, M, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((M, 1), jnp.float32),     # running max
+            pltpu.VMEM((M, 1), jnp.float32),     # running sum
+            pltpu.VMEM((M, hd), jnp.float32),    # unnormalized acc
+        ],
+        interpret=interpret,
+    )(slen, step_arr, q, shared_k, shared_v, unshared_k, unshared_v)

@@ -1,0 +1,68 @@
+"""Jit'd public wrapper for the beam shared-prefix attention kernel.
+
+Accepts the engine layout used by ``repro.core.xattention`` and handles the
+kernel's beams-major rearrangement:
+
+  q            : (R, BW, H, hd)
+  shared_k/v   : (R, S, kvH, hd)
+  shared_len   : (R,)
+  unshared_k/v : (R, BW, ND, kvH, hd)
+  step         : () int32
+
+On CPU containers the kernel always runs in interpret mode (TPU is the
+target, not the runtime); on a real TPU backend set ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.beam_attn.kernel import beam_attention_kernel
+
+
+def pick_block_s(S: int, hd: int, m_rows: int,
+                 vmem_budget: int = 8 * 1024 * 1024) -> int:
+    """Cost-model block-size choice (the TPU analogue of the paper's
+    decision-tree CG partitioner; see kernels/beam_attn/tune.py).
+
+    Working set per grid step ~ 2·block_s·hd·4 (K,V tiles, fp32 in VMEM)
+    + m_rows·hd·4 (acc) + m_rows·block_s·4 (scores).  Pick the largest
+    128-multiple block_s that fits the budget, capped at S."""
+    best = 128
+    for cand in (128, 256, 512, 1024, 2048):
+        if cand > max(S, 128):
+            break
+        working = 2 * cand * hd * 4 + m_rows * hd * 4 + m_rows * cand * 4
+        if working <= vmem_budget:
+            best = cand
+    return min(best, max(128, S))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_s"))
+def beam_attention(q, shared_k, shared_v, shared_len, unshared_k, unshared_v,
+                   step, interpret: bool = True, block_s: int | None = None):
+    R, BW, H, hd = q.shape
+    kvH = shared_k.shape[2]
+    G = H // kvH
+    M = BW * G
+    scale = 1.0 / math.sqrt(hd)
+
+    # beams-major kernel layout
+    qk = q.reshape(R, BW, kvH, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        R, kvH, M, hd)
+    sk = shared_k.transpose(0, 2, 1, 3)           # (R, kvH, S, hd)
+    sv = shared_v.transpose(0, 2, 1, 3)
+    uk = unshared_k.transpose(0, 3, 1, 2, 4)      # (R, kvH, BW, ND, hd)
+    uv = unshared_v.transpose(0, 3, 1, 2, 4)
+
+    bs = block_s or pick_block_s(sk.shape[2], hd, M)
+    out = beam_attention_kernel(qk, sk, sv, shared_len, uk, uv,
+                                jnp.asarray(step),
+                                scale=scale, block_s=bs, interpret=interpret)
+    # back to engine layout (R, BW, H, hd)
+    return out.reshape(R, kvH, BW, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        R, BW, H, hd).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Offline block-shape selection for the beam-attention kernel.
+
+The paper (§5.2) trains a decision-tree regressor to pick the core-group
+partition per (shared_len, unshared_len).  On TPU the analogous degree of
+freedom is the kernel's grid/block shape.  With no wall-clock available in
+this container we rank candidates with a three-term roofline cost model per
+grid step (HBM bytes at 819 GB/s, MXU FLOPs at 197 TFLOP/s bf16, plus a
+fixed per-step overhead), which is exactly the napkin math the perf loop in
+EXPERIMENTS.md §Perf iterates on.  On real hardware, replace ``cost_model``
+with a timed sweep and keep ``choose_block`` unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+HBM_BW = 819e9           # bytes/s (TPU v5e)
+PEAK_FLOPS = 197e12      # bf16
+STEP_OVERHEAD = 1.5e-6   # s, per grid step (pipeline bubble + sync)
+VMEM_BYTES = 64 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    block_s: int
+    cost_s: float
+    vmem_bytes: int
+    bound: str
+
+
+def cost_model(S: int, hd: int, m_rows: int, block_s: int,
+               dtype_bytes: int = 2) -> Candidate:
+    n_steps = -(-S // block_s) + 1
+    # per step: K,V tiles from HBM; q resident; scores+acc in VMEM
+    bytes_per_step = 2 * block_s * hd * dtype_bytes
+    flops_per_step = 2 * 2 * m_rows * block_s * hd       # qk^T + pv
+    t_mem = bytes_per_step / HBM_BW
+    t_cmp = flops_per_step / PEAK_FLOPS
+    t_step = max(t_mem, t_cmp) + STEP_OVERHEAD
+    vmem = (2 * block_s * hd * 4          # K,V fp32 staging
+            + m_rows * hd * 4             # acc
+            + m_rows * block_s * 4        # scores
+            + m_rows * hd * dtype_bytes)  # q
+    return Candidate(block_s, n_steps * t_step, vmem,
+                     "memory" if t_mem > t_cmp else "compute")
+
+
+def choose_block(S: int, hd: int, m_rows: int,
+                 dtype_bytes: int = 2) -> Tuple[int, Dict[int, Candidate]]:
+    table: Dict[int, Candidate] = {}
+    best = None
+    for bs in (128, 256, 512, 1024, 2048, 4096):
+        if bs > max(128, S):
+            break
+        c = cost_model(S, hd, m_rows, bs, dtype_bytes)
+        if c.vmem_bytes > VMEM_BYTES // 2:   # double-buffering headroom
+            continue
+        table[bs] = c
+        if best is None or c.cost_s < best.cost_s:
+            best = c
+    assert best is not None
+    return best.block_s, table

@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over the real local devices (tests / CPU runs)."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes a global-batch dimension shards over."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

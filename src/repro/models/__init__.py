@@ -1,0 +1,6 @@
+from repro.models.model import (BaseModel, EncDecModel, HybridModel,
+                                RWKVModel, TransformerModel, cache_len,
+                                get_model)
+
+__all__ = ["BaseModel", "TransformerModel", "RWKVModel", "HybridModel",
+           "EncDecModel", "get_model", "cache_len"]

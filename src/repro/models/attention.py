@@ -1,0 +1,484 @@
+"""Attention variants for the model zoo: GQA (grouped-query), MLA
+(multi-head latent, DeepSeek-V2/MiniCPM3), sliding-window, and their
+train / prefill / single-token-decode paths with layer-stacked KV caches.
+
+Note: this module is the *generic model-zoo* attention.  The xGR technique
+(shared/unshared separated cache + staged beam attention) lives in
+``repro.core.xattention`` and is used by the GR serving path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import Initializer, Params, dense
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product attention with GQA grouping
+# ---------------------------------------------------------------------------
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array,
+        mask: Optional[jax.Array], scale: float) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, H, hd) — H = kvH * G
+    k,v: (B, Skv, kvH, hd)
+    mask: broadcastable to (B, kvH, G, Sq, Skv); True = attend.
+    returns (B, Sq, H, hd)
+    """
+    B, Sq, H, hd = q.shape
+    kvH = k.shape[2]
+    G = H // kvH
+    qg = q.reshape(B, Sq, kvH, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def causal_mask(sq: int, skv: int, window: int = 0,
+                offset: int = 0) -> jax.Array:
+    """(sq, skv) True=attend causal mask; query i sits at position offset+i."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) causal attention — §Perf optimization.
+#
+# The naive path materializes (B, H, S, S) fp32 scores: at S=32k that is
+# hundreds of GB per device and dominates the memory roofline term of every
+# train/prefill shape.  This path scans KV in chunks with running
+# (m, l, acc) online-softmax state, so peak score memory is
+# (B, H, S, CHUNK) and HBM traffic drops by ~S/CHUNK on the score tensors.
+# Pure JAX: XLA fuses the chunk body; on TPU the Mosaic/XLA pipeline keeps
+# the chunk resident in VMEM.  Numerics match the naive path (same softmax).
+# ---------------------------------------------------------------------------
+
+FLASH_THRESHOLD = 2048          # use the chunked path when S exceeds this
+FLASH_CHUNK = 1024
+# Baseline/optimized switch for the §Perf comparison: the dry-run baseline
+# lowers with the naive S x S path (FLASH_ENABLED=False); the optimized
+# lowers flip this on (see EXPERIMENTS.md §Perf).
+FLASH_ENABLED = False
+# Roofline probes unroll the chunk scan so XLA cost analysis (which counts a
+# while body once) sees every chunk; see repro.roofline.analysis.
+FLASH_UNROLL = False
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             scale: float, window: int = 0,
+                             chunk: int = 0) -> jax.Array:
+    """Causal GQA attention without materializing S x S scores.
+
+    Double tiling (§Perf iteration 2): an outer scan over QUERY blocks and an
+    inner scan over KV blocks, so the transient score tensor is
+    (B, kvH, G, qc, kc) — tiling only KV still left (B, H, S, kc) alive,
+    which at 128 heads x 32k was tens of GB.  Fully-masked (kb > qb) tiles
+    still execute (dynamic trip counts aren't expressible in scan) — a known
+    2x compute overhead vs causal-optimal, traded for O(S^2/nq/nc) memory.
+
+    q: (B, S, H, hd);  k/v: (B, S, kvH, hd).  Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    kvH = k.shape[2]
+    G = H // kvH
+    chunk = chunk or FLASH_CHUNK
+    qc = kc = min(chunk, S)
+    pad_q = (-S) % qc
+    pad_k = (-S) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq = (S + pad_q) // qc
+    nk = (S + pad_k) // kc
+    qb_all = qp.reshape(B, nq, qc, kvH, G, hd)
+    kb_all = jnp.moveaxis(kp.reshape(B, nk, kc, kvH, hd), 1, 0)
+    vb_all = jnp.moveaxis(vp.reshape(B, nk, kc, kvH, hd), 1, 0)
+    unroll = True if FLASH_UNROLL else 1
+
+    def q_block(_, xs):
+        qb, q_idx = xs                            # (B, qc, kvH, G, hd)
+        qpos = q_idx * qc + jnp.arange(qc)
+
+        def kv_block(carry, kxs):
+            m_run, l_run, acc = carry
+            kb, vb, k_idx = kxs                   # (B, kc, kvH, hd)
+            scores = jnp.einsum("bskgd,btkd->bkgst", qb, kb
+                                ).astype(jnp.float32) * scale
+            kpos = k_idx * kc + jnp.arange(kc)
+            valid = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < S)
+            if window > 0:
+                valid &= kpos[None, :] > qpos[:, None] - window
+            scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+            m_cur = jnp.max(scores, axis=-1)
+            m_new = jnp.maximum(m_run, m_cur)
+            p = jnp.where(valid[None, None, None],
+                          jnp.exp(scores - m_new[..., None]), 0.0)
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] \
+                + jnp.einsum("bkgst,btkd->bkgsd", p.astype(vb.dtype), vb
+                             ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, kvH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, kvH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, kvH, G, qc, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (kb_all, vb_all, jnp.arange(nk)),
+            unroll=unroll)
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        return None, out.astype(q.dtype)          # (B, kvH, G, qc, hd)
+
+    _, outs = jax.lax.scan(
+        q_block, None,
+        (jnp.moveaxis(qb_all, 1, 0), jnp.arange(nq)), unroll=unroll)
+    # (nq, B, kvH, G, qc, hd) -> (B, S, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5).reshape(
+        B, nq * qc, H, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(init: Initializer, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, kvH = cfg.num_heads, cfg.num_kv_heads
+    std = 0.02
+    out_std = std / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "wq": init.normal((d, H * hd), std),
+        "wk": init.normal((d, kvH * hd), std),
+        "wv": init.normal((d, kvH * hd), std),
+        "wo": init.normal((H * hd, d), out_std),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = init.zeros((H * hd,))
+        p["bk"] = init.zeros((kvH * hd,))
+        p["bv"] = init.zeros((kvH * hd,))
+    return p
+
+
+def gqa_qkv(p: Params, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(x, p["wq"], p.get("bq")).reshape(B, S, cfg.num_heads, hd)
+    k = dense(x, p["wk"], p.get("bk")).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense(x, p["wv"], p.get("bv")).reshape(B, S, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def gqa_attention(p: Params, x: jax.Array, cos: jax.Array, sin: jax.Array,
+                  cfg: ModelConfig, window: int = 0, return_kv: bool = False):
+    """Full (train/prefill) causal self-attention; returns (B, S, d).
+
+    ``return_kv=True`` additionally returns the post-RoPE K/V (prefill path,
+    to populate the decode cache)."""
+    B, S, _ = x.shape
+    q, k, v = gqa_qkv(p, x, cfg)
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    if FLASH_ENABLED and S > FLASH_THRESHOLD:
+        out = chunked_causal_attention(q, k, v, scale, window)
+    else:
+        mask = causal_mask(S, S, window)[None, None, None]
+        out = mha(q, k, v, mask, scale)
+    out = dense(out.reshape(B, S, -1), p["wo"])
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def gqa_decode(p: Params, x: jax.Array, cos: jax.Array, sin: jax.Array,
+               kcache: jax.Array, vcache: jax.Array, length: jax.Array,
+               cfg: ModelConfig, ring: bool = False
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode against a (B, S_max, kvH, hd) cache.
+
+    ``ring``: sliding-window ring buffer — new KV written at ``length % S_max``
+    and all populated slots attended (order-free under softmax).
+    Returns (out (B,1,d), new_kcache, new_vcache).
+    """
+    B = x.shape[0]
+    S_max = kcache.shape[1]
+    q, k, v = gqa_qkv(p, x, cfg)            # S == 1
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    slot = jnp.where(ring, length % S_max, length)
+    kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k.astype(kcache.dtype), slot, 1)
+    vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v.astype(vcache.dtype), slot, 1)
+    n_valid = jnp.minimum(length + 1, S_max)
+    mask = (jnp.arange(S_max) < n_valid)[None, None, None, None, :]
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    out = mha(q, kcache, vcache, mask, scale)
+    return dense(out.reshape(B, 1, -1), p["wo"]), kcache, vcache
+
+
+# ---------------------------------------------------------------------------
+# Separated-cache single-stream decode — §Perf hillclimb 3.
+#
+# This is the paper's xAttention separated-cache idea applied to the generic
+# serve path.  Baseline decode keeps ONE cache with the sequence dim
+# context-sharded over 'model' and dynamic-update-slices the new token into
+# it each step; XLA then all-gathers + rewrites the multi-GB buffer every
+# step (observed: ~240 all-gathers / 27 GB/dev/step on internlm2 decode_32k).
+# Separated decode instead keeps the prompt KV FROZEN (context-sharded, read
+# once, never written) and appends new tokens to a tiny replicated "recent"
+# ring buffer; the two stages merge by online softmax — exactly the paper's
+# shared/unshared split, with "shared" = the whole past context.  A
+# production engine flushes recent->frozen every RECENT_BUFFER tokens
+# (amortized repartition, off the critical path).
+# ---------------------------------------------------------------------------
+
+SEPARATED_DECODE = False
+RECENT_BUFFER = 32
+
+
+def gqa_decode_separated(p: Params, x: jax.Array, cos: jax.Array,
+                         sin: jax.Array, frozen_k: jax.Array,
+                         frozen_v: jax.Array, recent_k: jax.Array,
+                         recent_v: jax.Array, length: jax.Array,
+                         recent_count: jax.Array, cfg: ModelConfig):
+    """frozen_k/v (B,S,kvH,hd) read-only; recent_k/v (B,Rr,kvH,hd) ring.
+
+    Returns (out (B,1,d), recent_k, recent_v) — the frozen cache is never
+    rewritten."""
+    B = x.shape[0]
+    S = frozen_k.shape[1]
+    Rr = recent_k.shape[1]
+    q, k, v = gqa_qkv(p, x, cfg)
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    slot = recent_count % Rr
+    recent_k = jax.lax.dynamic_update_slice_in_dim(
+        recent_k, k.astype(recent_k.dtype), slot, 1)
+    recent_v = jax.lax.dynamic_update_slice_in_dim(
+        recent_v, v.astype(recent_v.dtype), slot, 1)
+
+    kvH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    G = cfg.num_heads // kvH
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, kvH, G, hd)
+
+    def stage(kc, vc, valid):
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32) * scale
+        sc = jnp.where(valid[:, None, None, None, :], sc, NEG_INF)
+        m = jnp.max(sc, -1)
+        pr = jnp.where(valid[:, None, None, None, :], jnp.exp(sc - m[..., None]), 0.0)
+        l = jnp.sum(pr, -1)
+        o = jnp.einsum("bkgst,btkd->bkgsd", pr.astype(vc.dtype), vc
+                       ).astype(jnp.float32)
+        return m, l, o
+
+    # tokens decoded since the last flush live in the recent ring, so the
+    # frozen prefix holds exactly (length - recent_count) tokens
+    frozen_len = length - jnp.minimum(recent_count, Rr)
+    fvalid = jnp.broadcast_to(jnp.arange(S)[None] < frozen_len, (B, S))
+    rvalid = jnp.broadcast_to(
+        jnp.arange(Rr)[None] < jnp.minimum(recent_count + 1, Rr), (B, Rr))
+    m1, l1, o1 = stage(frozen_k, frozen_v, fvalid)
+    m2, l2, o2 = stage(recent_k, recent_v, rvalid)
+    m = jnp.maximum(m1, m2)
+    c1, c2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    out = (o1 * c1[..., None] + o2 * c2[..., None]) / \
+        jnp.maximum((l1 * c1 + l2 * c2)[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, 1, cfg.num_heads * hd
+                                          ).astype(x.dtype)
+    return dense(out, p["wo"]), recent_k, recent_v
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2 §2.1, MiniCPM3)
+#
+# KV is compressed to a rank-r latent c_kv plus a shared rotary key k_rope.
+# The latent IS the cache.  Decode uses the "absorbed" formulation: q_nope is
+# mapped through W_uk into latent space so attention runs directly against the
+# cached latents — bytes/step scale with r + rope_dim instead of 2*H*hd.
+# ---------------------------------------------------------------------------
+
+def init_mla_params(init: Initializer, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    nope, rope_d = cfg.mla_qk_nope_head_dim, cfg.mla_qk_rope_head_dim
+    vd, r, qr = cfg.mla_v_head_dim, cfg.mla_kv_lora_rank, cfg.mla_q_lora_rank
+    std = 0.02
+    out_std = std / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "wdkv": init.normal((d, r), std),
+        "kv_norm": init.ones((r,)),
+        "wkr": init.normal((d, rope_d), std),
+        "wuk": init.normal((r, H * nope), std),
+        "wuv": init.normal((r, H * vd), std),
+        "wo": init.normal((H * vd, d), out_std),
+    }
+    if qr:
+        p["wdq"] = init.normal((d, qr), std)
+        p["q_norm"] = init.ones((qr,))
+        p["wuq"] = init.normal((qr, H * (nope + rope_d)), std)
+    else:
+        p["wq"] = init.normal((d, H * (nope + rope_d)), std)
+    return p
+
+
+def _mla_queries(p: Params, x: jax.Array, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, jax.Array]:
+    from repro.models.common import rmsnorm
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.mla_qk_nope_head_dim, cfg.mla_qk_rope_head_dim
+    if "wdq" in p:
+        ql = rmsnorm(dense(x, p["wdq"]), p["q_norm"], cfg.norm_eps)
+        q = dense(ql, p["wuq"])
+    else:
+        q = dense(x, p["wq"])
+    q = q.reshape(B, S, H, nope + rope_d)
+    return q[..., :nope], q[..., nope:]
+
+
+def mla_latents(p: Params, x: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x -> (c_kv (B,S,r), k_rope (B,S,rope_d)); these are what gets cached."""
+    from repro.models.common import rmsnorm
+    ckv = rmsnorm(dense(x, p["wdkv"]), p["kv_norm"], cfg.norm_eps)
+    krope = dense(x, p["wkr"])
+    return ckv, krope
+
+
+def mla_attention(p: Params, x: jax.Array, cos: jax.Array, sin: jax.Array,
+                  cfg: ModelConfig, window: int = 0, return_kv: bool = False):
+    """Train/prefill MLA with naive (expanded) K/V.
+
+    ``return_kv=True`` additionally returns the cacheable latents
+    (c_kv, post-rope k_rope)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.mla_qk_nope_head_dim, cfg.mla_qk_rope_head_dim
+    vd = cfg.mla_v_head_dim
+    q_nope, q_rope = _mla_queries(p, x, cfg)
+    ckv, krope = mla_latents(p, x, cfg)
+    k_nope = dense(ckv, p["wuk"]).reshape(B, S, H, nope)
+    v = dense(ckv, p["wuv"]).reshape(B, S, H, vd)
+    q_rope = apply_rope(q_rope, cos, sin)
+    krope = apply_rope(krope[:, :, None, :], cos, sin)      # one shared rope head
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    if FLASH_ENABLED and S > FLASH_THRESHOLD:
+        # fold the shared rotary key into the head dim:  q'k' = q_nope.k_nope
+        # + q_rope.k_rope, then run the generic chunked path (kvH == H)
+        qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kc = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope, (B, S, H, rope_d))], axis=-1)
+        # value head dim differs from qk head dim; pad V for the shared
+        # einsum then slice back
+        out = chunked_causal_attention(qc, kc,
+                                       jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                                   (0, nope + rope_d - vd))),
+                                       scale, window)[..., :vd]
+    else:
+        scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+                  + jnp.einsum("bshd,btxd->bhst", q_rope, krope)
+                  ).astype(jnp.float32) * scale
+        mask = causal_mask(S, S, window)[None, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    out = dense(out.reshape(B, S, -1), p["wo"])
+    if return_kv:
+        return out, ckv, krope[:, :, 0, :]
+    return out
+
+
+def mla_decode(p: Params, x: jax.Array, cos: jax.Array, sin: jax.Array,
+               ckv_cache: jax.Array, krope_cache: jax.Array,
+               length: jax.Array, cfg: ModelConfig, ring: bool = False
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-form decode: attention runs in latent space against the cache.
+
+    ckv_cache (B, S_max, r), krope_cache (B, S_max, rope_d).
+    """
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rope_d = cfg.mla_qk_nope_head_dim, cfg.mla_qk_rope_head_dim
+    vd, r = cfg.mla_v_head_dim, cfg.mla_kv_lora_rank
+    S_max = ckv_cache.shape[1]
+
+    q_nope, q_rope = _mla_queries(p, x, cfg)                 # (B,1,H,·)
+    q_rope = apply_rope(q_rope, cos, sin)
+    ckv, krope = mla_latents(p, x, cfg)
+    krope = apply_rope(krope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    slot = jnp.where(ring, length % S_max, length)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, ckv.astype(ckv_cache.dtype), slot, 1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, krope.astype(krope_cache.dtype), slot, 1)
+
+    # Absorb W_uk into the query:  q_lat[h] = q_nope[h] @ W_uk[h]^T  -> (B,H,r)
+    wuk = p["wuk"].reshape(r, H, nope)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk)
+    scores = (jnp.einsum("bhr,btr->bht", q_lat, ckv_cache)
+              + jnp.einsum("bhd,btd->bht", q_rope[:, 0], krope_cache)
+              ).astype(jnp.float32) / math.sqrt(nope + rope_d)
+    n_valid = jnp.minimum(length + 1, S_max)
+    scores = jnp.where((jnp.arange(S_max) < n_valid)[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv_cache.dtype)
+    out_lat = jnp.einsum("bht,btr->bhr", probs, ckv_cache)   # (B,H,r)
+    wuv = p["wuv"].reshape(r, H, vd)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, wuv).reshape(B, 1, H * vd)
+    return dense(out, p["wo"]), ckv_cache, krope_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_params(init: Initializer, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H = cfg.num_heads
+    std = 0.02
+    return {
+        "wq": init.normal((d, H * hd), std),
+        "wk": init.normal((d, H * hd), std),
+        "wv": init.normal((d, H * hd), std),
+        "wo": init.normal((H * hd, d), std / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def cross_kv(p: Params, enc: jax.Array, cfg: ModelConfig
+             ) -> Tuple[jax.Array, jax.Array]:
+    B, T, _ = enc.shape
+    hd = cfg.resolved_head_dim
+    k = dense(enc, p["wk"]).reshape(B, T, cfg.num_heads, hd)
+    v = dense(enc, p["wv"]).reshape(B, T, cfg.num_heads, hd)
+    return k, v
+
+
+def cross_attention(p: Params, x: jax.Array, k: jax.Array, v: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(x, p["wq"]).reshape(B, S, cfg.num_heads, hd)
+    out = mha(q, k, v, None, 1.0 / math.sqrt(hd))
+    return dense(out.reshape(B, S, -1), p["wo"])

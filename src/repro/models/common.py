@@ -1,0 +1,141 @@
+"""Shared building blocks: norms, embeddings, initializers, param utilities.
+
+Parameters are plain nested dicts of ``jnp.ndarray`` (pytrees).  Repeated
+transformer blocks store their params *stacked* along a leading layer axis so
+the forward pass can ``jax.lax.scan`` over layers — essential to keep XLA
+compile times sane for 80-layer dry-runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+#
+# ``init`` builds real arrays; ``abstract_init`` builds ShapeDtypeStructs with
+# identical structure (used by the multi-pod dry-run so that no host memory is
+# allocated for 480B-parameter models).
+# ---------------------------------------------------------------------------
+
+class Initializer:
+    """Counts RNG splits deterministically and supports abstract mode."""
+
+    def __init__(self, rng: jax.Array | None, dtype: jnp.dtype,
+                 abstract: bool = False):
+        self._rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def normal(self, shape: Tuple[int, ...], std: float = 0.02) -> jax.Array:
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return (jax.random.normal(self._next(), shape, jnp.float32) * std
+                ).astype(self.dtype)
+
+    def zeros(self, shape: Tuple[int, ...]) -> jax.Array:
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, shape: Tuple[int, ...]) -> jax.Array:
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.ones(shape, self.dtype)
+
+    def constant(self, shape: Tuple[int, ...], value: float) -> jax.Array:
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.full(shape, value, self.dtype)
+
+    def uniform(self, shape: Tuple[int, ...], lo: float, hi: float) -> jax.Array:
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jax.random.uniform(self._next(), shape, jnp.float32, lo, hi
+                                  ).astype(self.dtype)
+
+
+def stack_layers(layer_params: Iterable[Params]) -> Params:
+    """Stack per-layer param dicts along a new leading axis (for lax.scan)."""
+    layers = list(layer_params)
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def abstract_stack(leaf_fn: Callable[[], Params], n: int) -> Params:
+    """Abstract analogue of stack_layers: prepend layer axis to every leaf."""
+    one = leaf_fn()
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), one)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale + bias
+
+
+def make_norm_params(init: Initializer, d: int, kind: str) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": init.ones((d,))}
+    return {"scale": init.ones((d,)), "bias": init.zeros((d,))}
+
+
+def apply_norm(params: Params, x: jax.Array, kind: str,
+               eps: float = 1e-5) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"], eps)
+    return layernorm(x, params["scale"], params["bias"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) fp-upcast for stability."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def count_params(params: Params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU and GELU MLPs."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import Initializer, Params, dense
+
+
+def init_mlp_params(init: Initializer, d: int, d_ff: int, act: str,
+                    num_layers: int) -> Params:
+    std = 0.02
+    out_std = std / math.sqrt(2 * num_layers)
+    if act == "swiglu":
+        return {
+            "w_gate": init.normal((d, d_ff), std),
+            "w_up": init.normal((d, d_ff), std),
+            "w_down": init.normal((d_ff, d), out_std),
+        }
+    return {
+        "w_up": init.normal((d, d_ff), std),
+        "b_up": init.zeros((d_ff,)),
+        "w_down": init.normal((d_ff, d), out_std),
+        "b_down": init.zeros((d,)),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        return dense(jax.nn.silu(dense(x, p["w_gate"])) * dense(x, p["w_up"]),
+                     p["w_down"])
+    h = jax.nn.gelu(dense(x, p["w_up"], p["b_up"]))
+    return dense(h, p["w_down"], p["b_down"])

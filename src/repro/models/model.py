@@ -1,0 +1,968 @@
+"""Model API: one class per architecture family, a common interface.
+
+Every model exposes:
+  init(rng, dtype)                  -> params (real arrays)
+  abstract_params(dtype)            -> params as ShapeDtypeStructs (dry-run)
+  forward(params, batch)            -> (logits (B,S,V), aux_loss)
+  loss(params, batch)               -> (scalar, metrics dict)
+  init_cache(batch, seq_len, dtype, abstract) -> decode cache/state pytree
+  prefill(params, batch, cache)     -> (last_logits (B,V), cache)
+  decode_step(params, tokens (B,), cache) -> (logits (B,V), cache)
+  train_inputs(shape, abstract)     / decode_inputs(shape, ...) input builders
+
+Repeated blocks are layer-stacked and driven by ``jax.lax.scan`` so 80-layer
+dry-runs compile one block body.  Caches are stacked along the same layer
+axis and scanned together with the params.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeSpec
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.common import (Initializer, Params, abstract_stack,
+                                 apply_norm, dense, make_norm_params,
+                                 softmax_cross_entropy, stack_layers)
+from repro.models.mlp import apply_mlp, init_mlp_params
+from repro.models.moe import apply_moe, init_moe_params
+from repro.models.rope import apply_rope, mrope_angles, rope_angles
+from repro.sharding.hints import hint
+
+Batch = Dict[str, jax.Array]
+Cache = Dict[str, Any]
+
+# Ring-buffer (sliding-window) policy: dense archs keep the full cache up to
+# this length and fall back to their window only for the long_500k stress
+# shape; hybrid/enc-dec archs use their natural window whenever seq exceeds it.
+FULL_CACHE_MAX = 65536
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    w = cfg.sliding_window
+    if not w:
+        return seq_len
+    if seq_len > FULL_CACHE_MAX:
+        return w
+    if cfg.family in ("hybrid", "encdec") and seq_len > w:
+        return w
+    return seq_len
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+class BaseModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # When True, layer scans fully unroll (no while loop).  Used by the
+        # roofline probe compiles: XLA's cost analysis counts a while body
+        # once regardless of trip count, so per-layer costs are extracted
+        # from unrolled shallow variants (see repro.roofline.analysis).
+        self.scan_unroll = False
+
+    def _scan(self, body, init, xs, length=None):
+        return jax.lax.scan(body, init, xs, length=length,
+                            unroll=True if self.scan_unroll else 1)
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> Params:
+        return self._build(Initializer(rng, dtype))
+
+    def abstract_params(self, dtype=jnp.bfloat16) -> Params:
+        return self._build(Initializer(None, dtype, abstract=True))
+
+    def _build(self, init: Initializer) -> Params:
+        raise NotImplementedError
+
+    def _stack(self, init: Initializer, build_fn, n: int) -> Params:
+        if init.abstract:
+            return abstract_stack(lambda: build_fn(init), n)
+        return stack_layers([build_fn(init) for _ in range(n)])
+
+    # ------------------------------------------------------------- interface
+    def forward(self, params: Params, batch: Batch) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    def loss(self, params: Params, batch: Batch):
+        logits, aux = self.forward(params, batch)
+        ce = softmax_cross_entropy(logits, batch["labels"],
+                                   batch.get("loss_mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.float32,
+                   abstract: bool = False) -> Cache:
+        raise NotImplementedError
+
+    def prefill(self, params: Params, batch: Batch, cache: Cache):
+        raise NotImplementedError
+
+    def decode_step(self, params: Params, tokens: jax.Array, cache: Cache):
+        raise NotImplementedError
+
+    # -------------------------------------------------------- input builders
+    def train_inputs(self, shape: ShapeSpec, abstract: bool = True,
+                     rng: Optional[jax.Array] = None) -> Batch:
+        B, S = shape.global_batch, shape.seq_len
+        out = {"tokens": _spec((B, S), jnp.int32),
+               "labels": _spec((B, S), jnp.int32)}
+        out.update(self._extra_inputs(B, S))
+        if not abstract:
+            out = _materialize(out, rng, self.cfg.vocab_size)
+        return out
+
+    def decode_inputs(self, shape: ShapeSpec, dtype=jnp.bfloat16,
+                      abstract: bool = True) -> Tuple[jax.Array, Cache]:
+        B = shape.global_batch
+        # dry-run decodes assume a fully-populated cache of seq_len tokens
+        if abstract:
+            return _spec((B,), jnp.int32), self.init_cache(
+                B, shape.seq_len, dtype, abstract=True)
+        return (jnp.zeros((B,), jnp.int32),
+                self.init_cache(B, shape.seq_len, dtype, abstract=False))
+
+    def _extra_inputs(self, B: int, S: int) -> Batch:
+        return {}
+
+    # shared helpers ---------------------------------------------------------
+    def _embed(self, params, tokens):
+        return params["embed"][tokens]
+
+    def _logits(self, params, x):
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        out = dense(x, head)
+        spec = ["batch"] + [None] * (out.ndim - 2) + ["model"]
+        return hint(out, *spec)
+
+    def _head_params(self, init):
+        cfg = self.cfg
+        p = {"embed": init.normal((cfg.vocab_size, cfg.d_model)),
+             "final_norm": make_norm_params(init, cfg.d_model, cfg.norm_kind)}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init.normal((cfg.d_model, cfg.vocab_size))
+        return p
+
+
+def _materialize(specs: Batch, rng: Optional[jax.Array], vocab: int) -> Batch:
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, s in specs.items():
+        rng, sub = jax.random.split(rng)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, vocab, s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype) * 0.02
+    return out
+
+
+# ===========================================================================
+# Dense / VLM / MoE transformer
+# ===========================================================================
+
+class TransformerModel(BaseModel):
+    """Decoder-only transformer: dense GQA/MLA, optional MoE FFN, optional
+    VLM inputs (precomputed vision patch embeddings + M-RoPE)."""
+
+    # ------------------------------------------------------------------ init
+    def _build(self, init: Initializer) -> Params:
+        cfg = self.cfg
+        p = self._head_params(init)
+        n_dense = cfg.moe_first_dense_layers if cfg.is_moe else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.is_moe else 0
+        if n_dense:
+            p["dense_layers"] = self._stack(
+                init, lambda i: self._dense_layer(i), n_dense)
+        if n_moe:
+            p["moe_layers"] = self._stack(
+                init, lambda i: self._moe_layer(i), n_moe)
+        return p
+
+    def _attn_params(self, init):
+        cfg = self.cfg
+        if cfg.attention_kind == "mla":
+            return attn.init_mla_params(init, cfg)
+        return attn.init_gqa_params(init, cfg)
+
+    def _dense_layer(self, init) -> Params:
+        cfg = self.cfg
+        return {
+            "ln1": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+            "attn": self._attn_params(init),
+            "ln2": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+            "mlp": init_mlp_params(init, cfg.d_model, cfg.d_ff, cfg.act_kind,
+                                   cfg.num_layers),
+        }
+
+    def _moe_layer(self, init) -> Params:
+        cfg = self.cfg
+        p = {
+            "ln1": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+            "attn": self._attn_params(init),
+            "ln2": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+            "moe": init_moe_params(init, cfg),
+        }
+        if cfg.moe_dense_residual:
+            p["mlp"] = init_mlp_params(init, cfg.d_model, cfg.d_ff,
+                                       cfg.act_kind, cfg.num_layers)
+        return p
+
+    # --------------------------------------------------------------- angles
+    def _angles(self, batch_or_positions, S: int, B: int, offset=None):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        if cfg.attention_kind == "mla":
+            rot = cfg.mla_qk_rope_head_dim
+        else:
+            rot = int(hd * cfg.rope_fraction) & ~1
+        if cfg.rope_kind == "mrope":
+            pos = batch_or_positions  # (B,3,S)
+            return mrope_angles(pos, rot, cfg.rope_theta)
+        if cfg.rope_kind in ("rope",):
+            if offset is None:
+                pos = jnp.arange(S)[None, :]
+            else:
+                pos = offset.reshape(1, 1) + jnp.arange(S)[None, :]
+            return rope_angles(pos, rot, cfg.rope_theta)
+        return None, None  # learned/none
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            # vision patch embeddings occupy the leading positions (stub
+            # frontend); truncate if the sequence is shorter than the patch
+            # budget (e.g. reduced smoke configs)
+            nv = min(batch["vision_embeds"].shape[1], S)
+            x = jnp.concatenate(
+                [batch["vision_embeds"][:, :nv].astype(x.dtype), x[:, nv:]],
+                axis=1)
+            cos, sin = self._angles(batch["positions"], S, B)
+        else:
+            cos, sin = self._angles(None, S, B)
+
+        def attn_fn(p, h):
+            if cfg.attention_kind == "mla":
+                return attn.mla_attention(p, h, cos, sin, cfg)
+            return attn.gqa_attention(p, h, cos, sin, cfg)
+
+        def dense_body(h, lp):
+            h = hint(h, "batch", None, None)
+            h = h + attn_fn(lp["attn"], apply_norm(lp["ln1"], h, cfg.norm_kind,
+                                                   cfg.norm_eps))
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg.norm_kind,
+                                                    cfg.norm_eps), cfg.act_kind)
+            return hint(h, "batch", None, None), jnp.float32(0.0)
+
+        def moe_body(h, lp):
+            h = hint(h, "batch", None, None)
+            h = h + attn_fn(lp["attn"], apply_norm(lp["ln1"], h, cfg.norm_kind,
+                                                   cfg.norm_eps))
+            hn = apply_norm(lp["ln2"], h, cfg.norm_kind, cfg.norm_eps)
+            mo, aux = apply_moe(lp["moe"], hn, cfg)
+            if cfg.moe_dense_residual:
+                mo = mo + apply_mlp(lp["mlp"], hn, cfg.act_kind)
+            return hint(h + mo, "batch", None, None), aux
+
+        aux_total = jnp.float32(0.0)
+        if "dense_layers" in params:
+            body = jax.checkpoint(dense_body) if S > 1 else dense_body
+            x, _ = self._scan(lambda h, lp: body(h, lp),
+                                x, params["dense_layers"])
+        if "moe_layers" in params:
+            body = jax.checkpoint(moe_body) if S > 1 else moe_body
+            x, auxs = self._scan(lambda h, lp: body(h, lp),
+                                   x, params["moe_layers"])
+            aux_total = aux_total + jnp.sum(auxs)
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        return self._logits(params, x), aux_total
+
+    # ----------------------------------------------------------------- cache
+    def _cache_arrays(self, B: int, L: int, n_layers: int, dtype):
+        cfg = self.cfg
+        if cfg.attention_kind == "mla":
+            return {
+                "ckv": _spec((n_layers, B, L, cfg.mla_kv_lora_rank), dtype),
+                "krope": _spec((n_layers, B, L, cfg.mla_qk_rope_head_dim), dtype),
+            }
+        hd = cfg.resolved_head_dim
+        return {"k": _spec((n_layers, B, L, cfg.num_kv_heads, hd), dtype),
+                "v": _spec((n_layers, B, L, cfg.num_kv_heads, hd), dtype)}
+
+    def init_cache(self, batch, seq_len, dtype=jnp.float32, abstract=False):
+        cfg = self.cfg
+        L = cache_len(cfg, seq_len)
+        ring = L < seq_len
+        n_dense = cfg.moe_first_dense_layers if cfg.is_moe else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.is_moe else 0
+        sep = attn.SEPARATED_DECODE and cfg.attention_kind == "gqa"
+        cache: Cache = {"length": _spec((), jnp.int32),
+                        "ring": bool(ring)}
+        if sep:
+            cache["recent_count"] = _spec((), jnp.int32)
+        if n_dense:
+            cache["dense"] = self._cache_arrays(batch, L, n_dense, dtype)
+            if sep:
+                hd = cfg.resolved_head_dim
+                rr = attn.RECENT_BUFFER
+                cache["dense"]["rk"] = _spec(
+                    (n_dense, batch, rr, cfg.num_kv_heads, hd), dtype)
+                cache["dense"]["rv"] = _spec(
+                    (n_dense, batch, rr, cfg.num_kv_heads, hd), dtype)
+        if n_moe:
+            cache["moe"] = self._cache_arrays(batch, L, n_moe, dtype)
+            if sep:
+                hd = cfg.resolved_head_dim
+                rr = attn.RECENT_BUFFER
+                cache["moe"]["rk"] = _spec(
+                    (n_moe, batch, rr, cfg.num_kv_heads, hd), dtype)
+                cache["moe"]["rv"] = _spec(
+                    (n_moe, batch, rr, cfg.num_kv_heads, hd), dtype)
+        if not abstract:
+            cache = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype)
+                if isinstance(s, jax.ShapeDtypeStruct) else s, cache,
+                is_leaf=lambda s: isinstance(s, (jax.ShapeDtypeStruct, bool)))
+        return cache
+
+    # ----------------------------------------------------------- decode path
+    def _attn_decode(self, lp, h, cos, sin, layer_cache, length, ring,
+                     recent_count=None):
+        cfg = self.cfg
+        if cfg.attention_kind == "mla":
+            out, ckv, krope = attn.mla_decode(
+                lp["attn"], h, cos, sin, layer_cache["ckv"],
+                layer_cache["krope"], length, cfg, ring)
+            return out, {"ckv": ckv, "krope": krope}
+        if "rk" in layer_cache:     # separated-cache decode (§Perf)
+            out, rk, rv = attn.gqa_decode_separated(
+                lp["attn"], h, cos, sin, layer_cache["k"], layer_cache["v"],
+                layer_cache["rk"], layer_cache["rv"], length, recent_count,
+                cfg)
+            # the frozen prefix is NOT returned: threading it through scan
+            # outputs forces XLA to copy the multi-GB buffer every step
+            # (§Perf hillclimb 3, iteration 2)
+            return out, {"rk": rk, "rv": rv}
+        out, k, v = attn.gqa_decode(
+            lp["attn"], h, cos, sin, layer_cache["k"], layer_cache["v"],
+            length, cfg, ring)
+        return out, {"k": k, "v": v}
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length = cache["length"]
+        ring = cache["ring"]
+        rc = cache.get("recent_count")
+        x = self._embed(params, tokens[:, None])
+        if cfg.rope_kind == "mrope":
+            pos = jnp.broadcast_to(length.reshape(1, 1, 1), (B, 3, 1))
+            cos, sin = self._angles(pos, 1, B)
+        else:
+            cos, sin = self._angles(None, 1, B, offset=length)
+
+        def dense_body(h, xs):
+            lp, lc = xs
+            h = hint(h, "batch", None, None)
+            hn = apply_norm(lp["ln1"], h, cfg.norm_kind, cfg.norm_eps)
+            a, lc = self._attn_decode(lp, hn, cos, sin, lc, length, ring, rc)
+            h = h + a
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg.norm_kind,
+                                                    cfg.norm_eps), cfg.act_kind)
+            return hint(h, "batch", None, None), lc
+
+        def moe_body(h, xs):
+            lp, lc = xs
+            h = hint(h, "batch", None, None)
+            hn = apply_norm(lp["ln1"], h, cfg.norm_kind, cfg.norm_eps)
+            a, lc = self._attn_decode(lp, hn, cos, sin, lc, length, ring, rc)
+            h = h + a
+            hn2 = apply_norm(lp["ln2"], h, cfg.norm_kind, cfg.norm_eps)
+            mo, _ = apply_moe(lp["moe"], hn2, cfg)
+            if cfg.moe_dense_residual:
+                mo = mo + apply_mlp(lp["mlp"], hn2, cfg.act_kind)
+            return hint(h + mo, "batch", None, None), lc
+
+        new_cache: Cache = {"length": length + 1, "ring": ring}
+        if rc is not None:
+            new_cache["recent_count"] = rc + 1
+        for group, body in (("dense", dense_body), ("moe", moe_body)):
+            key = f"{group}_layers"
+            if key not in params:
+                continue
+            x, nc = self._scan(body, x, (params[key], cache[group]))
+            if rc is not None and "rk" in cache[group]:
+                # frozen k/v buffers pass through untouched (aliased)
+                nc = {"k": cache[group]["k"], "v": cache[group]["v"],
+                      "rk": nc["rk"], "rv": nc["rv"]}
+            new_cache[group] = nc
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        return self._logits(params, x)[:, 0].astype(jnp.float32), new_cache
+
+    def prefill(self, params, batch, cache):
+        """Run the full prompt once, collecting per-layer KV into ``cache``.
+
+        Returns (last-token logits (B, V) fp32, populated cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            # vision patch embeddings occupy the leading positions (stub
+            # frontend); truncate if the sequence is shorter than the patch
+            # budget (e.g. reduced smoke configs)
+            nv = min(batch["vision_embeds"].shape[1], S)
+            x = jnp.concatenate(
+                [batch["vision_embeds"][:, :nv].astype(x.dtype), x[:, nv:]],
+                axis=1)
+            cos, sin = self._angles(batch["positions"], S, B)
+        else:
+            cos, sin = self._angles(None, S, B)
+
+        def attn_fn(p, h):
+            if cfg.attention_kind == "mla":
+                return attn.mla_attention(p, h, cos, sin, cfg, return_kv=True)
+            return attn.gqa_attention(p, h, cos, sin, cfg, return_kv=True)
+
+        def body(moe: bool):
+            def fn(h, lp):
+                h = hint(h, "batch", None, None)
+                a, k, v = attn_fn(lp["attn"],
+                                  apply_norm(lp["ln1"], h, cfg.norm_kind,
+                                             cfg.norm_eps))
+                h = h + a
+                hn = apply_norm(lp["ln2"], h, cfg.norm_kind, cfg.norm_eps)
+                if moe:
+                    mo, _ = apply_moe(lp["moe"], hn, cfg)
+                    if cfg.moe_dense_residual:
+                        mo = mo + apply_mlp(lp["mlp"], hn, cfg.act_kind)
+                    h = h + mo
+                else:
+                    h = h + apply_mlp(lp["mlp"], hn, cfg.act_kind)
+                return hint(h, "batch", None, None), (k, v)
+            return fn
+
+        new_cache: Cache = {"length": jnp.int32(S), "ring": cache["ring"]}
+        if "recent_count" in cache:
+            new_cache["recent_count"] = jnp.int32(0)
+        for group, moe in (("dense", False), ("moe", True)):
+            key = f"{group}_layers"
+            if key not in params:
+                continue
+            x, (ks, vs) = self._scan(body(moe), x, params[key])
+            sub = cache[group]
+            ref = sub["ckv"] if cfg.attention_kind == "mla" else sub["k"]
+            Lc = ref.shape[2]
+            new_cache[group] = self._fill_cache(sub, ks, vs, Lc, S)
+            if "rk" in sub:     # separated decode: keep the empty recent ring
+                new_cache[group]["rk"] = sub["rk"]
+                new_cache[group]["rv"] = sub["rv"]
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        if "lengths" in batch:   # right-padded prompts: per-request last token
+            x_last = x[jnp.arange(B), batch["lengths"] - 1]
+        else:
+            x_last = x[:, -1]
+        logits = self._logits(params, x_last).astype(jnp.float32)
+        return logits, new_cache
+
+    def _fill_cache(self, sub: Cache, ks, vs, Lc: int, S: int) -> Cache:
+        """Write collected KV (L,B,S,...) into a cache of length Lc.
+
+        If S > Lc (sliding-window ring), the last Lc positions land at their
+        ring slots pos % Lc."""
+        cfg = self.cfg
+        names = ("ckv", "krope") if cfg.attention_kind == "mla" else ("k", "v")
+        out = {}
+        for name, full in zip(names, (ks, vs)):
+            buf = sub[name]
+            if S <= Lc:
+                pad = [(0, 0)] * full.ndim
+                pad[2] = (0, Lc - S)
+                out[name] = jnp.pad(full, pad).astype(buf.dtype)
+            else:
+                slots = (jnp.arange(S - Lc, S)) % Lc
+                out[name] = jnp.zeros_like(buf).at[:, :, slots].set(
+                    full[:, :, -Lc:].astype(buf.dtype))
+        return out
+
+    def _extra_inputs(self, B, S):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            return {"vision_embeds": _spec((B, cfg.vision_tokens, cfg.d_model),
+                                           jnp.bfloat16),
+                    "positions": _spec((B, 3, S), jnp.int32)}
+        return {}
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+class RWKVModel(BaseModel):
+    def _build(self, init):
+        cfg = self.cfg
+        p = self._head_params(init)
+
+        def layer(i):
+            return {
+                "ln1": make_norm_params(init, cfg.d_model, "layernorm"),
+                "time": ssm.init_rwkv6_time_params(i, cfg),
+                "ln2": make_norm_params(init, cfg.d_model, "layernorm"),
+                "chan": ssm.init_rwkv6_channel_params(i, cfg),
+            }
+
+        p["layers"] = self._stack(init, lambda i: layer(i), cfg.num_layers)
+        return p
+
+    def _state_spec(self, B, dtype):
+        cfg = self.cfg
+        H, N = ssm.rwkv6_dims(cfg)
+        L = cfg.num_layers
+        return {
+            "shift1": _spec((L, B, 1, cfg.d_model), dtype),
+            "wkv": _spec((L, B, H, N, N), jnp.float32),
+            "shift2": _spec((L, B, 1, cfg.d_model), dtype),
+            "length": _spec((), jnp.int32),
+        }
+
+    def init_cache(self, batch, seq_len, dtype=jnp.float32, abstract=False):
+        spec = self._state_spec(batch, dtype)
+        if abstract:
+            return spec
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def _run(self, params, x, state):
+        cfg = self.cfg
+
+        def body(h, xs):
+            lp, s1, wkv, s2 = xs
+            tin = apply_norm(lp["ln1"], h, "layernorm", cfg.norm_eps)
+            tout, tstate = ssm.rwkv6_time_mix(
+                lp["time"], tin, cfg, {"shift": s1, "wkv": wkv})
+            h = h + tout
+            cin = apply_norm(lp["ln2"], h, "layernorm", cfg.norm_eps)
+            cout, cshift = ssm.rwkv6_channel_mix(lp["chan"], cin, s2)
+            h = h + cout
+            return h, (tstate["shift"], tstate["wkv"], cshift)
+
+        T = x.shape[1]
+        # optional remat (§Perf hillclimb 2, iteration 2): cut peak memory
+        # 211 -> 19 GB/dev on train_4k but RE-RUNS the projection collectives
+        # in backward (collective +39%) — refuted as a collective fix, kept
+        # as a memory-budget option (ssm.RWKV_REMAT)
+        body_fn = jax.checkpoint(body) if (T > 1 and ssm.RWKV_REMAT) else body
+        x, (s1, wkv, s2) = self._scan(
+            body_fn, x, (params["layers"], state["shift1"], state["wkv"],
+                         state["shift2"]))
+        return x, {"shift1": s1, "wkv": wkv, "shift2": s2}
+
+    def forward(self, params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        state = self.init_cache(B, S, x.dtype)
+        x, _ = self._run(params, x, state)
+        x = apply_norm(params["final_norm"], x, "layernorm", self.cfg.norm_eps)
+        return self._logits(params, x), jnp.float32(0.0)
+
+    def prefill(self, params, batch, cache):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        x, new = self._run(params, x, cache)
+        new["length"] = jnp.int32(S)
+        x = apply_norm(params["final_norm"], x, "layernorm", self.cfg.norm_eps)
+        return self._logits(params, x[:, -1]).astype(jnp.float32), new
+
+    def decode_step(self, params, tokens, cache):
+        x = self._embed(params, tokens[:, None])
+        x, new = self._run(params, x, cache)
+        new["length"] = cache["length"] + 1
+        x = apply_norm(params["final_norm"], x, "layernorm", self.cfg.norm_eps)
+        return self._logits(params, x)[:, 0].astype(jnp.float32), new
+
+
+# ===========================================================================
+# Zamba2-style hybrid: Mamba2 backbone + one weight-tied attention block
+# ===========================================================================
+
+class HybridModel(BaseModel):
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.num_layers // self.cfg.hybrid_attn_every
+
+    def _build(self, init):
+        cfg = self.cfg
+        p = self._head_params(init)
+        k = cfg.hybrid_attn_every
+
+        def mamba_layer(i):
+            return {"ln": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+                    "mamba": ssm.init_mamba2_params(i, cfg),
+                    "ln2": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+                    "mlp": init_mlp_params(init, cfg.d_model, cfg.d_ff,
+                                           cfg.act_kind, cfg.num_layers)}
+
+        def group(i):
+            return {"mamba_layers": self._stack(init, mamba_layer, k)}
+
+        p["groups"] = self._stack(init, group, self.n_groups)
+        p["shared_attn"] = {
+            "ln": make_norm_params(init, cfg.d_model, cfg.norm_kind),
+            "attn": attn.init_gqa_params(init, cfg),
+        }
+        return p
+
+    def init_cache(self, batch, seq_len, dtype=jnp.float32, abstract=False):
+        cfg = self.cfg
+        d_inner, H, P, N = ssm.mamba2_dims(cfg)
+        conv_dim = d_inner + 2 * N
+        K = cfg.ssm_conv_width
+        G = self.n_groups
+        k = cfg.hybrid_attn_every
+        L = cache_len(cfg, seq_len)
+        hd = cfg.resolved_head_dim
+        spec = {
+            "conv": _spec((G, k, batch, K - 1, conv_dim), dtype),
+            "ssm": _spec((G, k, batch, H, N, P), dtype),
+            "attn_k": _spec((G, batch, L, cfg.num_kv_heads, hd), dtype),
+            "attn_v": _spec((G, batch, L, cfg.num_kv_heads, hd), dtype),
+            "length": _spec((), jnp.int32),
+            "ring": bool(L < seq_len),
+        }
+        if abstract:
+            return spec
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype)
+            if isinstance(s, jax.ShapeDtypeStruct) else s, spec,
+            is_leaf=lambda s: isinstance(s, (jax.ShapeDtypeStruct, bool)))
+
+    def _mamba_sublayer(self, lp, h, cfg, decode, state):
+        hn = apply_norm(lp["ln"], h, cfg.norm_kind, cfg.norm_eps)
+        fn = ssm.mamba2_decode if decode else ssm.mamba2_forward
+        out, st = fn(lp["mamba"], hn, cfg, state)
+        h = h + out
+        h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, cfg.norm_kind,
+                                                cfg.norm_eps), cfg.act_kind)
+        return h, st
+
+    def forward(self, params, batch):
+        """Training/scoring forward; no caches are threaded (SSM states start
+        at zero and the shared-attn block runs full/windowed attention)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        rot = int(cfg.resolved_head_dim * cfg.rope_fraction) & ~1
+        cos, sin = rope_angles(jnp.arange(S)[None, :], rot, cfg.rope_theta)
+        shared = params["shared_attn"]
+        win = cfg.sliding_window if S > cfg.sliding_window else 0
+
+        def group_body(h, gp):
+            def inner(hc, lp):
+                hc, _ = self._mamba_sublayer(lp, hc, cfg, False, None)
+                return hc, None
+
+            h, _ = self._scan(inner, h, gp["mamba_layers"])
+            hn = apply_norm(shared["ln"], h, cfg.norm_kind, cfg.norm_eps)
+            h = h + attn.gqa_attention(shared["attn"], hn, cos, sin, cfg,
+                                       window=win)
+            return h, None
+
+        body = jax.checkpoint(group_body) if S > 1 else group_body
+        x, _ = self._scan(body, x, params["groups"])
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        return self._logits(params, x), jnp.float32(0.0)
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        rot = int(cfg.resolved_head_dim * cfg.rope_fraction) & ~1
+        cos, sin = rope_angles(jnp.arange(S)[None, :], rot, cfg.rope_theta)
+        shared = params["shared_attn"]
+        win = cfg.sliding_window if S > cfg.sliding_window else 0
+        Lc = cache["attn_k"].shape[2]
+
+        def group_body(h, xs):
+            gp, conv_s, ssm_s = xs
+
+            def inner(hc, ixs):
+                lp, cs, ss = ixs
+                hc, st = self._mamba_sublayer(
+                    lp, hc, cfg, False, {"conv": cs, "ssm": ss})
+                return hc, (st["conv"], st["ssm"].astype(cs.dtype))
+
+            h, (conv_n, ssm_n) = self._scan(
+                inner, h, (gp["mamba_layers"], conv_s, ssm_s))
+            hn = apply_norm(shared["ln"], h, cfg.norm_kind, cfg.norm_eps)
+            a, k, v = attn.gqa_attention(shared["attn"], hn, cos, sin, cfg,
+                                         window=win, return_kv=True)
+            h = h + a
+            return h, (conv_n, ssm_n, k, v)
+
+        x, (conv, ssm_s, ks, vs) = self._scan(
+            group_body, x, (params["groups"], cache["conv"], cache["ssm"]))
+        if S <= Lc:
+            pad = lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, Lc - S)]
+                                    + [(0, 0)] * (a.ndim - 3))
+            ak, av = pad(ks), pad(vs)
+        else:
+            slots = jnp.arange(S - Lc, S) % Lc
+            ak = jnp.zeros_like(cache["attn_k"]).at[:, :, slots].set(ks[:, :, -Lc:])
+            av = jnp.zeros_like(cache["attn_v"]).at[:, :, slots].set(vs[:, :, -Lc:])
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        new = {"conv": conv, "ssm": ssm_s,
+               "attn_k": ak.astype(cache["attn_k"].dtype),
+               "attn_v": av.astype(cache["attn_v"].dtype),
+               "length": jnp.int32(S), "ring": cache["ring"]}
+        return self._logits(params, x[:, -1]).astype(jnp.float32), new
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length, ring = cache["length"], cache["ring"]
+        x = self._embed(params, tokens[:, None])
+        rot = int(cfg.resolved_head_dim * cfg.rope_fraction) & ~1
+        cos, sin = rope_angles(length.reshape(1, 1), rot, cfg.rope_theta)
+        shared = params["shared_attn"]
+
+        def group_body(h, xs):
+            gp, conv_s, ssm_s, ak, av = xs
+
+            def inner(hc, ixs):
+                lp, cs, ss = ixs
+                hc, st = self._mamba_sublayer(
+                    lp, hc, cfg, True, {"conv": cs, "ssm": ss})
+                return hc, (st["conv"], st["ssm"].astype(cs.dtype))
+
+            h, (conv_n, ssm_n) = self._scan(
+                inner, h, (gp["mamba_layers"], conv_s, ssm_s))
+            hn = apply_norm(shared["ln"], h, cfg.norm_kind, cfg.norm_eps)
+            a, ak, av = attn.gqa_decode(shared["attn"], hn, cos, sin,
+                                        ak, av, length, cfg, ring)
+            h = h + a
+            return h, (conv_n, ssm_n, ak, av)
+
+        x, (conv, ssm_s, ak, av) = self._scan(
+            group_body, x, (params["groups"], cache["conv"], cache["ssm"],
+                            cache["attn_k"], cache["attn_v"]))
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        new = {"conv": conv, "ssm": ssm_s, "attn_k": ak, "attn_v": av,
+               "length": length + 1, "ring": ring}
+        return self._logits(params, x)[:, 0].astype(jnp.float32), new
+
+
+# ===========================================================================
+# Whisper-style encoder-decoder (audio frontend stubbed)
+# ===========================================================================
+
+def _sinusoid(S: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32) + (offset if offset is not None else 0)
+    inv = jnp.exp(-jnp.arange(0, d, 2, jnp.float32) / d * math.log(10000.0))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecModel(BaseModel):
+    def _build(self, init):
+        cfg = self.cfg
+        p = self._head_params(init)
+
+        def enc_layer(i):
+            return {"ln1": make_norm_params(init, cfg.d_model, "layernorm"),
+                    "attn": attn.init_gqa_params(init, cfg),
+                    "ln2": make_norm_params(init, cfg.d_model, "layernorm"),
+                    "mlp": init_mlp_params(init, cfg.d_model, cfg.d_ff,
+                                           "gelu", cfg.num_layers)}
+
+        def dec_layer(i):
+            return {"ln1": make_norm_params(init, cfg.d_model, "layernorm"),
+                    "attn": attn.init_gqa_params(init, cfg),
+                    "ln_x": make_norm_params(init, cfg.d_model, "layernorm"),
+                    "cross": attn.init_cross_params(init, cfg),
+                    "ln2": make_norm_params(init, cfg.d_model, "layernorm"),
+                    "mlp": init_mlp_params(init, cfg.d_model, cfg.d_ff,
+                                           "gelu", cfg.num_layers)}
+
+        p["enc_layers"] = self._stack(init, enc_layer, cfg.encoder_layers)
+        p["enc_norm"] = make_norm_params(init, cfg.d_model, "layernorm")
+        p["dec_layers"] = self._stack(init, dec_layer, cfg.num_layers)
+        return p
+
+    def encode(self, params, frames):
+        """frames: stubbed conv-frontend output (B, T_enc, d)."""
+        cfg = self.cfg
+        dt = params["embed"].dtype
+        x = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model).astype(dt)
+
+        def body(h, lp):
+            hn = apply_norm(lp["ln1"], h, "layernorm", cfg.norm_eps)
+            q, k, v = attn.gqa_qkv(lp["attn"], hn, cfg)
+            a = attn.mha(q, k, v, None, 1.0 / math.sqrt(cfg.resolved_head_dim))
+            B, S = hn.shape[:2]
+            h = h + dense(a.reshape(B, S, -1), lp["attn"]["wo"])
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, "layernorm",
+                                                    cfg.norm_eps), "gelu")
+            return h, None
+
+        x, _ = self._scan(body, x, params["enc_layers"])
+        return apply_norm(params["enc_norm"], x, "layernorm", cfg.norm_eps)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc = self.encode(params, batch["frames"])
+        x = self._embed(params, tokens) + _sinusoid(S, cfg.d_model).astype(
+            params["embed"].dtype)
+
+        def body(h, lp):
+            hn = apply_norm(lp["ln1"], h, "layernorm", cfg.norm_eps)
+            q, k, v = attn.gqa_qkv(lp["attn"], hn, cfg)
+            mask = attn.causal_mask(S, S)[None, None, None]
+            a = attn.mha(q, k, v, mask, 1.0 / math.sqrt(cfg.resolved_head_dim))
+            h = h + dense(a.reshape(B, S, -1), lp["attn"]["wo"])
+            hx = apply_norm(lp["ln_x"], h, "layernorm", cfg.norm_eps)
+            ck, cv = attn.cross_kv(lp["cross"], enc, cfg)
+            h = h + attn.cross_attention(lp["cross"], hx, ck, cv, cfg)
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, "layernorm",
+                                                    cfg.norm_eps), "gelu")
+            return h, None
+
+        x, _ = self._scan(jax.checkpoint(body) if S > 1 else body,
+                            x, params["dec_layers"])
+        x = apply_norm(params["final_norm"], x, "layernorm", cfg.norm_eps)
+        return self._logits(params, x), jnp.float32(0.0)
+
+    def init_cache(self, batch, seq_len, dtype=jnp.float32, abstract=False):
+        cfg = self.cfg
+        L = cache_len(cfg, seq_len)
+        hd = cfg.resolved_head_dim
+        nl = cfg.num_layers
+        spec = {
+            "k": _spec((nl, batch, L, cfg.num_kv_heads, hd), dtype),
+            "v": _spec((nl, batch, L, cfg.num_kv_heads, hd), dtype),
+            "cross_k": _spec((nl, batch, cfg.encoder_seq, cfg.num_heads, hd), dtype),
+            "cross_v": _spec((nl, batch, cfg.encoder_seq, cfg.num_heads, hd), dtype),
+            "length": _spec((), jnp.int32),
+            "ring": bool(L < seq_len),
+        }
+        if abstract:
+            return spec
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype)
+            if isinstance(s, jax.ShapeDtypeStruct) else s, spec,
+            is_leaf=lambda s: isinstance(s, (jax.ShapeDtypeStruct, bool)))
+
+    def init_cross_cache(self, params, frames, cache):
+        """Fill the cross-attention KV from encoder output (prefill side)."""
+        enc = self.encode(params, frames)
+
+        def body(_, lp):
+            k, v = attn.cross_kv(lp["cross"], enc, self.cfg)
+            return None, (k, v)
+
+        _, (ck, cv) = self._scan(body, None, params["dec_layers"])
+        cache = dict(cache)
+        cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        return cache
+
+    def prefill(self, params, batch, cache):
+        """Encode frames, fill cross-attention KV, then run the decoder
+        prompt collecting self-attention KV."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc = self.encode(params, batch["frames"])
+        x = self._embed(params, tokens) + _sinusoid(S, cfg.d_model).astype(
+            params["embed"].dtype)
+        Lc = cache["k"].shape[2]
+
+        def body(h, lp):
+            hn = apply_norm(lp["ln1"], h, "layernorm", cfg.norm_eps)
+            q, k, v = attn.gqa_qkv(lp["attn"], hn, cfg)
+            mask = attn.causal_mask(S, S)[None, None, None]
+            a = attn.mha(q, k, v, mask, 1.0 / math.sqrt(cfg.resolved_head_dim))
+            h = h + dense(a.reshape(B, S, -1), lp["attn"]["wo"])
+            hx = apply_norm(lp["ln_x"], h, "layernorm", cfg.norm_eps)
+            ck, cv = attn.cross_kv(lp["cross"], enc, cfg)
+            h = h + attn.cross_attention(lp["cross"], hx, ck, cv, cfg)
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, "layernorm",
+                                                    cfg.norm_eps), "gelu")
+            return h, (k, v, ck, cv)
+
+        x, (ks, vs, cks, cvs) = self._scan(body, x, params["dec_layers"])
+        if S <= Lc:
+            pad = lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, Lc - S), (0, 0),
+                                        (0, 0)])
+            ks, vs = pad(ks), pad(vs)
+        else:
+            slots = jnp.arange(S - Lc, S) % Lc
+            ks = jnp.zeros_like(cache["k"]).at[:, :, slots].set(ks[:, :, -Lc:])
+            vs = jnp.zeros_like(cache["v"]).at[:, :, slots].set(vs[:, :, -Lc:])
+        x = apply_norm(params["final_norm"], x, "layernorm", cfg.norm_eps)
+        new = {"k": ks.astype(cache["k"].dtype),
+               "v": vs.astype(cache["v"].dtype),
+               "cross_k": cks.astype(cache["cross_k"].dtype),
+               "cross_v": cvs.astype(cache["cross_v"].dtype),
+               "length": jnp.int32(S), "ring": cache["ring"]}
+        return self._logits(params, x[:, -1]).astype(jnp.float32), new
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        length, ring = cache["length"], cache["ring"]
+        x = self._embed(params, tokens[:, None])
+        x = x + _sinusoid(1, cfg.d_model, offset=length).astype(x.dtype)
+
+        def body(h, xs):
+            lp, k, v, ck, cv = xs
+            hn = apply_norm(lp["ln1"], h, "layernorm", cfg.norm_eps)
+            a, k, v = attn.gqa_decode(lp["attn"], hn, None, None, k, v,
+                                      length, cfg, ring)
+            h = h + a
+            hx = apply_norm(lp["ln_x"], h, "layernorm", cfg.norm_eps)
+            h = h + attn.cross_attention(lp["cross"], hx, ck, cv, cfg)
+            h = h + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], h, "layernorm",
+                                                    cfg.norm_eps), "gelu")
+            return h, (k, v)
+
+        x, (k, v) = self._scan(body, x, (params["dec_layers"], cache["k"],
+                                           cache["v"], cache["cross_k"],
+                                           cache["cross_v"]))
+        x = apply_norm(params["final_norm"], x, "layernorm", cfg.norm_eps)
+        new = dict(cache)
+        new.update({"k": k, "v": v, "length": length + 1})
+        return self._logits(params, x)[:, 0].astype(jnp.float32), new
+
+    def _extra_inputs(self, B, S):
+        cfg = self.cfg
+        return {"frames": _spec((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)}
+
+
+# ===========================================================================
+# Factory
+# ===========================================================================
+
+def get_model(cfg: ModelConfig) -> BaseModel:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerModel(cfg)
+    if cfg.family == "ssm":
+        return RWKVModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

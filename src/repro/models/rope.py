@@ -1,0 +1,62 @@
+"""Rotary position embeddings: standard RoPE, partial RoPE (StableLM), and
+M-RoPE (Qwen2-VL multimodal 3-axis rotary, arXiv:2409.12191)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# M-RoPE head-dim split across (temporal, height, width) angle groups,
+# expressed as fractions of the rotary half-dim (Qwen2-VL uses 16/24/24 of 64).
+MROPE_SECTIONS = (0.25, 0.375, 0.375)
+
+
+def _inv_freq(rot_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def rope_angles(positions: jax.Array, rot_dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) int -> cos/sin (..., S, rot_dim/2)."""
+    inv = _inv_freq(rot_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jax.Array, rot_dim: int,
+                 theta: float) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE: positions (B, 3, S) (t/h/w axes) -> cos/sin (B, S, rot_dim/2).
+
+    The rotary half-dim is partitioned into three contiguous sections; each
+    section takes its angle from the corresponding position axis.
+    """
+    half = rot_dim // 2
+    inv = _inv_freq(rot_dim, theta)                      # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, 3, S, half)
+    s0 = int(round(MROPE_SECTIONS[0] * half))
+    s1 = s0 + int(round(MROPE_SECTIONS[1] * half))
+    cos = jnp.concatenate([ang[:, 0, :, :s0], ang[:, 1, :, s0:s1],
+                           ang[:, 2, :, s1:]], axis=-1)
+    return jnp.cos(cos), jnp.sin(cos)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rope_fraction: float = 1.0) -> jax.Array:
+    """Rotate the leading ``rope_fraction`` of the head dim.
+
+    x: (..., S, H, head_dim); cos/sin: broadcastable (..., S, rot_dim/2).
+    Uses the interleave-free (half-split) convention.
+    """
+    head_dim = x.shape[-1]
+    rot_dim = int(head_dim * rope_fraction)
+    rot_dim -= rot_dim % 2
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    half = rot_dim // 2
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    c = cos[..., None, :].astype(x.dtype)   # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2, x_pass], axis=-1)

@@ -1,0 +1,333 @@
+"""State-space blocks: Mamba2 (chunked SSD) and RWKV6 (Finch) time/channel mix.
+
+TPU adaptation notes (DESIGN.md §2):
+- Mamba2 uses the *chunked SSD* formulation — intra-chunk attention-like
+  matmuls on the MXU + a short inter-chunk scan over chunk boundaries — rather
+  than a length-T sequential scan.  States materialize only at chunk
+  boundaries, keeping memory linear.
+- RWKV6's data-dependent per-channel decay makes the clean matmul chunking
+  numerically delicate; the baseline implementation is a ``lax.scan`` token
+  recurrence (one compiled body).  A chunked variant is a perf-iteration
+  candidate (see EXPERIMENTS.md §Perf).
+
+Both expose forward (train/prefill, returns outputs + final state) and a
+single-token decode step, so beam forking copies O(1)-size state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import Initializer, Params, dense, rmsnorm
+from repro.sharding.hints import hint
+
+# §Perf toggle (EXPERIMENTS.md): keep the WKV time-scan operands and carry
+# sharded over heads on the 'model' axis.  Without this XLA all-gathers the
+# (B, T, H, N) r/k/v/decay streams onto every model shard before the scan —
+# the dominant collective cost of rwkv6 train_4k.
+RWKV_HEAD_SHARD = False
+# remat rwkv layers during training (memory-budget option; see model.py)
+RWKV_REMAT = False
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+SSD_CHUNK = 128
+
+
+def mamba2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state_dim
+    return d_inner, H, P, N
+
+
+def init_mamba2_params(init: Initializer, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, H, P, N = mamba2_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    std = 0.02
+    return {
+        "in_proj": init.normal((d, 2 * d_inner + 2 * N + H), std),
+        "conv_w": init.normal((cfg.ssm_conv_width, conv_dim), std),
+        "conv_b": init.zeros((conv_dim,)),
+        "A_log": init.constant((H,), 0.0),          # A = -exp(A_log) = -1
+        "D": init.ones((H,)),
+        "dt_bias": init.constant((H,), -2.0),       # softplus(-2) ~ 0.13
+        "norm": init.ones((d_inner,)),
+        "out_proj": init.normal((d_inner, d), std / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _mamba2_split(p: Params, x: jax.Array, cfg: ModelConfig):
+    d_inner, H, P, N = mamba2_dims(cfg)
+    zxbcdt = dense(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt                                # xbc still pre-conv
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over time.  xbc (B,T,C), w (K,C).
+
+    Returns (out (B,T,C), new_state (B,K-1,C) holding the trailing inputs).
+    """
+    K = w.shape[0]
+    B, T, C = xbc.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)     # (B, T+K-1, C)
+    out = jnp.zeros((B, T, C), xbc.dtype)
+    for i in range(K):                               # K=4: unrolled taps
+        out = out + full[:, i:i + T, :] * w[i]
+    new_state = full[:, -(K - 1):, :] if K > 1 else state
+    return jax.nn.silu(out + b), new_state
+
+
+def _ssd_chunked(xu: jax.Array, a_log: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                 init_state: jax.Array | None = None):
+    """Chunked SSD core.
+
+    xu    (B, T, H, P)  dt-scaled inputs
+    a_log (B, T, H)     log decay per step (negative)
+    Bm,Cm (B, T, N)     input/output projections (shared across heads; n_groups=1)
+    init_state          (B, H, N, P) carried state or None
+    Returns (y (B,T,H,P) fp32, final_state (B,H,N,P)).
+    """
+    B, T, H, P = xu.shape
+    N = Bm.shape[-1]
+    L = min(SSD_CHUNK, T)
+    pad = (-T) % L
+    if pad:
+        xu = jnp.pad(xu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // L
+    xu = xu.reshape(B, nc, L, H, P).astype(jnp.float32)
+    a_log = a_log.reshape(B, nc, L, H).astype(jnp.float32)
+    Bm = Bm.reshape(B, nc, L, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, nc, L, N).astype(jnp.float32)
+
+    cum = jnp.cumsum(a_log, axis=2)                  # (B,nc,L,H)
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xu_j
+    G = jnp.einsum("bcln,bcmn->bclm", Cm, Bm)        # (B,nc,L,L)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H) i,j
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    W = G[..., None] * decay                          # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", W, xu)
+
+    # chunk-boundary states: S_c = sum_j exp(cum_last - cum_j) B_j (x) xu_j
+    dlast = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,L,H)
+    S_chunk = jnp.einsum("bcln,bclh,bclhp->bchnp", Bm, dlast, xu)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B,nc,H)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, N, P), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def step(S, inp):
+        cd, Sc = inp                                  # (B,H), (B,H,N,P)
+        S_out = S                                     # state *entering* chunk
+        S = cd[..., None, None] * S + Sc
+        return S, S_out
+
+    final, S_enter = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    S_enter = jnp.moveaxis(S_enter, 0, 1)             # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcln,bchnp,bclh->bclhp", Cm, S_enter, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)
+    return y[:, :T], final
+
+
+def mamba2_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                   state: Dict[str, jax.Array] | None = None):
+    """x (B,T,d) -> (out (B,T,d), state {conv (B,K-1,C), ssm (B,H,N,P)})."""
+    B, T, d = x.shape
+    d_inner, H, P, N = mamba2_dims(cfg)
+    z, xbc, dt = _mamba2_split(p, x, cfg)
+    conv_state = state["conv"] if state else None
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = xs.reshape(B, T, H, P)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a_log = dt * A                                    # (B,T,H), negative
+    xu = xh.astype(jnp.float32) * dt[..., None]
+    y, ssm_state = _ssd_chunked(xu, a_log, Bm, Cm,
+                                state["ssm"] if state else None)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    return out, {"conv": conv_state, "ssm": ssm_state.astype(x.dtype)}
+
+
+def mamba2_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+                  state: Dict[str, jax.Array]):
+    """Single-token step: x (B,1,d); state updated in O(1)."""
+    B = x.shape[0]
+    d_inner, H, P, N = mamba2_dims(cfg)
+    z, xbc, dt = _mamba2_split(p, x, cfg)
+    K = p["conv_w"].shape[0]
+    full = jnp.concatenate([state["conv"], xbc], axis=1)       # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", full, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = full[:, 1:, :]
+    xs, Bm, Cm = jnp.split(xbc1, [d_inner, d_inner + N], axis=-1)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A)                                  # (B,H)
+    xu = xh * dt[:, 0][..., None]
+    S = state["ssm"].astype(jnp.float32)
+    S = a[..., None, None] * S + jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32), xu)
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return dense(y, p["out_proj"]), {"conv": new_conv, "ssm": S.astype(x.dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay, arXiv:2404.05892
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 64
+
+
+def rwkv6_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    N = cfg.ssm_head_dim or 64
+    H = cfg.d_model // N
+    return H, N
+
+
+def init_rwkv6_time_params(init: Initializer, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H, N = rwkv6_dims(cfg)
+    std = 0.02
+    return {
+        # token-shift lerp coefficients (static simplification of the
+        # data-dependent ddlerp; documented in DESIGN.md)
+        "mu_r": init.uniform((d,), 0.0, 1.0),
+        "mu_k": init.uniform((d,), 0.0, 1.0),
+        "mu_v": init.uniform((d,), 0.0, 1.0),
+        "mu_w": init.uniform((d,), 0.0, 1.0),
+        "mu_g": init.uniform((d,), 0.0, 1.0),
+        "w_r": init.normal((d, d), std),
+        "w_k": init.normal((d, d), std),
+        "w_v": init.normal((d, d), std),
+        "w_g": init.normal((d, d), std),
+        # data-dependent decay LoRA:  w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": init.constant((d,), -1.0),
+        "wA": init.normal((d, RWKV_LORA), std),
+        "wB": init.normal((RWKV_LORA, d), std),
+        "u": init.normal((H, N), std),                       # per-head bonus
+        "gn_scale": init.ones((d,)),
+        "w_out": init.normal((d, d), std / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def init_rwkv6_channel_params(init: Initializer, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    std = 0.02
+    return {
+        "mu_k": init.uniform((d,), 0.0, 1.0),
+        "mu_r": init.uniform((d,), 0.0, 1.0),
+        "w_k": init.normal((d, f), std),
+        "w_v": init.normal((f, d), std / math.sqrt(2 * cfg.num_layers)),
+        "w_r": init.normal((d, d), std),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x (B,T,d), prev (B,1,d) last token of previous segment -> shifted x."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _group_norm(x: jax.Array, H: int, N: int, scale: jax.Array,
+                eps: float = 64e-5) -> jax.Array:
+    B, T, d = x.shape
+    xg = x.reshape(B, T, H, N).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = ((xg - mu) ** 2).mean(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(B, T, d).astype(x.dtype) * scale
+
+
+def rwkv6_time_mix(p: Params, x: jax.Array, cfg: ModelConfig,
+                   state: Dict[str, jax.Array] | None = None):
+    """WKV6 recurrence via lax.scan.  x (B,T,d).
+
+    state: {"shift": (B,1,d), "wkv": (B,H,N,N)} — key-dim × value-dim.
+    """
+    B, T, d = x.shape
+    H, N = rwkv6_dims(cfg)
+    if state is None:
+        state = {"shift": jnp.zeros((B, 1, d), x.dtype),
+                 "wkv": jnp.zeros((B, H, N, N), jnp.float32)}
+    xs = _token_shift(x, state["shift"])
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = dense(mix(p["mu_r"]), p["w_r"]).reshape(B, T, H, N)
+    k = dense(mix(p["mu_k"]), p["w_k"]).reshape(B, T, H, N)
+    v = dense(mix(p["mu_v"]), p["w_v"]).reshape(B, T, H, N)
+    g = dense(mix(p["mu_g"]), p["w_g"])
+    xw = mix(p["mu_w"]).astype(jnp.float32)
+    wdec = jnp.exp(-jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.tanh(xw @ p["wA"].astype(jnp.float32)) @ p["wB"].astype(jnp.float32)
+    )).reshape(B, T, H, N)                                    # decay in (0,1)
+
+    u = p["u"].astype(jnp.float32)
+
+    if RWKV_HEAD_SHARD:
+        shard = lambda t: hint(t, "batch", None, "model", None)  # noqa: E731
+        r, k, v, wdec = shard(r), shard(k), shard(v), shard(wdec)
+        state = dict(state)
+        state["wkv"] = hint(state["wkv"], "batch", "model", None, None)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                  # (B,H,N) each
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)              # key x value
+        out = jnp.einsum("bhn,bhnm->bhm", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    seq = (jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(wdec, 1, 0))
+    S, outs = jax.lax.scan(step, state["wkv"], seq)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, T, d).astype(x.dtype)
+    out = _group_norm(out, H, N, p["gn_scale"])
+    out = dense(out * jax.nn.silu(g), p["w_out"])
+    new_state = {"shift": x[:, -1:], "wkv": S}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p: Params, x: jax.Array,
+                      state: jax.Array | None = None):
+    """Squared-ReLU channel mix.  state: (B,1,d) previous token."""
+    B, T, d = x.shape
+    if state is None:
+        state = jnp.zeros((B, 1, d), x.dtype)
+    xs = _token_shift(x, state)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(dense(xk, p["w_k"])))
+    out = jax.nn.sigmoid(dense(xr, p["w_r"])) * dense(k, p["w_v"])
+    return out, x[:, -1:]

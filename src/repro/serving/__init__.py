@@ -1,0 +1,9 @@
+from repro.serving.engine import GREngine, EngineStats
+from repro.serving.metrics import latency_summary, percentile
+from repro.serving.request import BatchPlan, RequestState
+from repro.serving.scheduler import TokenCapacityBatcher, bucket_len
+from repro.serving.server import ServerReport, run_server
+
+__all__ = ["GREngine", "EngineStats", "latency_summary", "percentile",
+           "BatchPlan", "RequestState", "TokenCapacityBatcher", "bucket_len",
+           "ServerReport", "run_server"]

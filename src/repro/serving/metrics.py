@@ -1,0 +1,27 @@
+"""Latency/throughput summaries (avg + P99 under varying RPS — paper §9.1)."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def latency_summary(latencies_s: Sequence[float],
+                    duration_s: float) -> Dict[str, float]:
+    arr = np.asarray(latencies_s, np.float64)
+    n = len(arr)
+    return {
+        "requests": n,
+        "throughput_rps": n / duration_s if duration_s > 0 else float("nan"),
+        "avg_ms": float(arr.mean() * 1e3) if n else float("nan"),
+        "p50_ms": percentile(arr, 50) * 1e3 if n else float("nan"),
+        "p99_ms": percentile(arr, 99) * 1e3 if n else float("nan"),
+        "max_ms": float(arr.max() * 1e3) if n else float("nan"),
+    }

@@ -1,0 +1,50 @@
+"""Request lifecycle tracking for the serving simulator."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestState:
+    rid: int
+    tokens: np.ndarray              # (len,) int32 prompt
+    arrival_s: float
+    enqueue_s: Optional[float] = None
+    dispatch_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    items: Optional[np.ndarray] = None      # (BW, ND) results
+    log_probs: Optional[np.ndarray] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def latency_s(self) -> float:
+        assert self.finish_s is not None
+        return self.finish_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        assert self.dispatch_s is not None
+        return self.dispatch_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """A dispatched batch: requests padded to a common bucket length."""
+    requests: List[RequestState]
+    bucket_len: int
+    formed_s: float
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.size * self.bucket_len

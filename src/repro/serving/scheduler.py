@@ -1,0 +1,68 @@
+"""xSchedule scheduler tier (paper §7).
+
+Token-capacity dynamic batching with an SLO wait quota: requests accumulate
+until either (a) adding the next request would exceed the padded-token
+capacity or the request cap, or (b) the oldest queued request has waited the
+batching quota — then the batch dispatches immediately.  Prompt lengths are
+padded to power-of-two buckets so the engine compiles a bounded set of
+shapes (GR request sizes are power-law distributed; see data/synthetic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.config import ServeConfig
+from repro.serving.request import BatchPlan, RequestState
+
+
+def bucket_len(n: int, min_bucket: int = 64) -> int:
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return b
+
+
+class TokenCapacityBatcher:
+    def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
+        self.cfg = cfg
+        self.min_bucket = min_bucket
+        self.queue: Deque[RequestState] = deque()
+
+    def add(self, req: RequestState, now_s: float):
+        req.enqueue_s = now_s
+        self.queue.append(req)
+
+    def _would_overflow(self, batch: List[RequestState],
+                        nxt: RequestState) -> bool:
+        blen = max([bucket_len(r.prompt_len, self.min_bucket)
+                    for r in batch + [nxt]])
+        return ((len(batch) + 1) * blen > self.cfg.max_batch_tokens
+                or len(batch) + 1 > self.cfg.max_batch_requests)
+
+    def maybe_dispatch(self, now_s: float, force: bool = False
+                       ) -> Optional[BatchPlan]:
+        """Returns a batch if capacity is reached or quota expired."""
+        if not self.queue:
+            return None
+        quota = self.cfg.batch_wait_quota_ms / 1e3
+        oldest_wait = now_s - self.queue[0].enqueue_s
+        batch: List[RequestState] = []
+        while self.queue:
+            nxt = self.queue[0]
+            if batch and self._would_overflow(batch, nxt):
+                break
+            batch.append(self.queue.popleft())
+        capacity_hit = bool(self.queue)      # stopped because full
+        if not (capacity_hit or oldest_wait >= quota or force):
+            # put them back and wait for more traffic
+            for r in reversed(batch):
+                self.queue.appendleft(r)
+            return None
+        blen = max(bucket_len(r.prompt_len, self.min_bucket) for r in batch)
+        return BatchPlan(requests=batch, bucket_len=blen, formed_s=now_s)
+
+    def __len__(self):
+        return len(self.queue)

@@ -1,0 +1,4 @@
+from repro.sharding.specs import (cache_pspecs, input_pspecs, param_pspecs,
+                                  to_shardings)
+
+__all__ = ["cache_pspecs", "input_pspecs", "param_pspecs", "to_shardings"]

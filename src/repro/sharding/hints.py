@@ -1,0 +1,76 @@
+"""Activation sharding hints.
+
+``with_sharding_constraint`` pins intermediate layouts so the SPMD
+partitioner makes stable, local choices (without hints, XLA's global
+auto-sharding picks different strategies per program depth — observed as
+non-affine probe costs on the MoE archs).  Models call ``hint(x, ...)``
+with symbolic axis names; the hint is a no-op unless a mesh has been
+installed via ``mesh_context`` (tests and CPU examples run mesh-free).
+
+Symbolic axes:  'batch' -> ('pod','data') or ('data',) depending on the
+mesh; 'model' -> 'model'; None -> unsharded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    global _CURRENT_MESH
+    prev = _CURRENT_MESH
+    _CURRENT_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT_MESH = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+def _resolve(axis, mesh: Mesh):
+    if axis == "batch":
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return axis
+
+
+def hint(x: jax.Array, *spec):
+    """Constrain ``x`` to the symbolic spec if a mesh is installed."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    resolved = []
+    for dim, axis in zip(x.shape, spec):
+        a = _resolve(axis, mesh)
+        if a is None:
+            resolved.append(None)
+            continue
+        names = a if isinstance(a, tuple) else (a,)
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        resolved.append(a if dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def batch_shards() -> int:
+    """Number of shards along the batch ('pod' x 'data') axes, 1 if no mesh."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("data", 1)
+    n *= sizes.get("pod", 1)
+    return n

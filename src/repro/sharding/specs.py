@@ -1,0 +1,180 @@
+"""PartitionSpec rules: params (TP × FSDP), inputs, decode caches.
+
+Conventions (DESIGN.md §5):
+  * 'model'  — tensor parallelism: attention heads, FFN hidden, MoE experts,
+               vocab dim of embedding/lm_head.
+  * 'data'   — batch; additionally FSDP-shards large models' weights.
+  * 'pod'    — multi-pod axis, folded into the batch/FSDP group.
+
+Rules are applied from the *trailing* dimensions of each leaf, so
+layer-stacked (and group-stacked) leading axes pick up ``None`` automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+FSDP_THRESHOLD = 8e9          # params; above this, weights shard over 'data'
+
+
+def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _mdl(mesh: Mesh, dim: int) -> Optional[str]:
+    """'model' if the dim is divisible by the model-axis size, else None."""
+    size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    return "model" if dim % size == 0 else None
+
+
+def _fsdp(mesh: Mesh, dim: int, enabled: bool):
+    if not enabled:
+        return None
+    axes = _fsdp_axes(mesh)
+    size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                        for a in axes]))
+    return axes if dim % size == 0 else None
+
+
+# name -> (trailing-dims spec builder).  `f` = fsdp placement, `m` = model.
+def _trailing_spec(name: str, path_names: Sequence[str], shape, mesh, fsdp):
+    nd = len(shape)
+    f = lambda d: _fsdp(mesh, shape[d], fsdp)       # noqa: E731
+    m = lambda d: _mdl(mesh, shape[d])              # noqa: E731
+
+    def tail(*spec):
+        return P(*([None] * (nd - len(spec)) + list(spec)))
+
+    in_moe = "moe" in path_names
+    if "chan" in path_names and name == "w_v":
+        # RWKV channel-mix w_v is a DOWN projection (d_ff -> d): contract the
+        # sharded d_ff dim (partial-sum + all-reduce) instead of replicating
+        # it, which forced 1.9 GB activation all-gathers (§Perf hillclimb 2)
+        return tail(m(-2), f(-1))
+    if name in ("embed",):
+        return tail(m(-2), None)
+    if name in ("lm_head",):
+        return tail(f(-2), m(-1))
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_k", "w_v", "w_r",
+                "w_g", "in_proj", "wuq", "wuk", "wuv"):
+        if in_moe and nd >= 3 and name in ("w_gate", "w_up"):
+            return tail(m(-3), f(-2), None)          # (E, d, f): experts
+        return tail(f(-2), m(-1))
+    if name in ("wo", "w_down", "w_out", "out_proj"):
+        if in_moe and nd >= 3 and name == "w_down":
+            return tail(m(-3), None, f(-1))          # (E, f, d)
+        return tail(m(-2), f(-1))
+    if name == "router":
+        return tail(f(-2), None)
+    if name in ("wdq", "wdkv", "wkr", "wA"):
+        return tail(f(-2), None)
+    if name in ("wB",):
+        return tail(None, m(-1))
+    if name in ("bq", "bk", "bv", "b_up"):
+        return tail(m(-1))
+    if name == "conv_w":
+        return tail(None, m(-1))
+    if name in ("conv_b",):
+        return tail(m(-1))
+    # norms, biases, scalars, mu_*, u, A_log, D, dt_bias, w0, gn_scale ...
+    return P(*([None] * nd))
+
+
+def param_pspecs(cfg: ModelConfig, abstract_params, mesh: Mesh,
+                 fsdp: Optional[bool] = None):
+    """Pytree of PartitionSpec matching ``abstract_params``."""
+    if fsdp is None:
+        fsdp = cfg.n_params > FSDP_THRESHOLD
+
+    def rule(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        return _trailing_spec(names[-1], names, leaf.shape, mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def _batch_spec(mesh: Mesh, batch: int, nd: int) -> P:
+    axes = _fsdp_axes(mesh)
+    size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                        for a in axes]))
+    lead = axes if batch % size == 0 else None
+    return P(*([lead] + [None] * (nd - 1)))
+
+
+def input_pspecs(batch_tree, mesh: Mesh):
+    """Shard the leading (global-batch) dim of every input leaf."""
+    return jax.tree.map(
+        lambda l: _batch_spec(mesh, l.shape[0], len(l.shape))
+        if getattr(l, "ndim", len(l.shape)) >= 1 and l.shape else P(),
+        batch_tree,
+        is_leaf=lambda l: isinstance(l, (jax.ShapeDtypeStruct, jax.Array)))
+
+
+# ---------------------------------------------------------------------------
+# Decode caches — name + position based (layouts fixed per family)
+# ---------------------------------------------------------------------------
+
+_CACHE_DIMS = {
+    # leaf name -> (batch dim, kv-head dim or None, seq dim or None).
+    # Preference order for the 'model' axis: kv heads if divisible, else the
+    # cache sequence dim (decode context-parallelism: the softmax over a
+    # sharded KV axis costs only small (m, l, o) partial-reductions, far
+    # cheaper than replicating multi-GB caches on every chip).
+    "k": (1, 3, 2), "v": (1, 3, 2),
+    "ckv": (1, None, 2), "krope": (1, None, 2),
+    "cross_k": (1, 3, 2), "cross_v": (1, 3, 2),
+    "attn_k": (1, 3, 2), "attn_v": (1, 3, 2),
+    "rk": (1, 3, None), "rv": (1, 3, None),   # recent ring: tiny, replicated S
+    "shift1": (1, None, None), "shift2": (1, None, None),
+    "wkv": (1, None, None),
+    "conv": (2, None, None), "ssm": (2, None, None),
+}
+
+
+def cache_pspecs(cfg: ModelConfig, abstract_cache, mesh: Mesh):
+    axes = _fsdp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bsize = int(np.prod([sizes[a] for a in axes]))
+
+    def rule(path, leaf):
+        if not getattr(leaf, "shape", ()):        # scalars (length, step)
+            return P()
+        if isinstance(leaf, bool):
+            return P()
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        info = _CACHE_DIMS.get(name)
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if info is None:
+            return P(*spec)
+        bdim, hdim, sdim = info
+        if leaf.shape[bdim] % bsize == 0:
+            spec[bdim] = axes
+        if hdim is not None and hdim < nd \
+                and leaf.shape[hdim] % sizes["model"] == 0:
+            spec[hdim] = "model"
+        elif sdim is not None and sdim < nd \
+                and leaf.shape[sdim] % sizes["model"] == 0:
+            spec[sdim] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(
+        rule, abstract_cache,
+        is_leaf=lambda l: isinstance(l, (jax.ShapeDtypeStruct, jax.Array, bool)))
+
+
+def to_shardings(pspec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,7 @@
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamW, AdamWState
+from repro.training.train_loop import (jit_train_step, make_train_step,
+                                       train_loop)
+
+__all__ = ["AdamW", "AdamWState", "jit_train_step", "make_train_step",
+           "train_loop", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,52 @@
+"""Flat-npz checkpointing for param/optimizer pytrees."""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blobs = {"__step__": np.int64(step)}
+    for k, v in _flatten(params).items():
+        blobs[f"p/{k}"] = v
+    if opt_state is not None:
+        for k, v in _flatten(opt_state).items():
+            blobs[f"o/{k}"] = v
+    np.savez(path, **blobs)
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None):
+    """Restores into the structure of the given templates."""
+    data = np.load(path, allow_pickle=False)
+    step = int(data["__step__"])
+
+    def refill(template, prefix):
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in leaves:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = jnp.asarray(data[key]).astype(leaf.dtype)
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+
+    params = refill(params_template, "p/")
+    opt = refill(opt_template, "o/") if opt_template is not None else None
+    return params, opt, step

@@ -1,0 +1,88 @@
+"""Pure-JAX AdamW with cosine schedule and global-norm clipping.
+
+Optimizer state is a pytree shaped like the params (plus a step counter), so
+the same PartitionSpecs shard it (ZeRO-style when FSDP is on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def cosine_schedule(cfg: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * cfg.learning_rate * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+class AdamW:
+    def __init__(self, cfg: TrainConfig):
+        self.cfg = cfg
+        self.lr = cosine_schedule(cfg)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda: jax.tree.map(           # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def abstract_init(self, abstract_params) -> AdamWState:
+        zeros = lambda: jax.tree.map(           # noqa: E731
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            abstract_params)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          mu=zeros(), nu=zeros())
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        b1, b2 = cfg.beta1, cfg.beta2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * clip
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + cfg.eps) \
+                + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state.mu)
+        flat_nu = tdef.flatten_up_to(state.nu)
+        outs = [upd(p, g, m, n) for p, g, m, n
+                in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_mu = tdef.unflatten([o[1] for o in outs])
+        new_nu = tdef.unflatten([o[2] for o in outs])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(step, new_mu, new_nu), metrics

@@ -1,0 +1,36 @@
+"""Multi-pod dry-run smoke: runs launch/dryrun.py in a subprocess (the
+512-device XLA override must own process startup) for one light
+(arch x shape) pair on both meshes."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_and_multi_pod():
+    with tempfile.TemporaryDirectory() as out:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "internlm2-1.8b", "--shape", "decode_32k",
+             "--mesh", "both", "--no-probe", "--out", out],
+            env=env, cwd=ROOT, capture_output=True, text=True, timeout=560)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        recs = []
+        for f in sorted(os.listdir(out)):
+            with open(os.path.join(out, f)) as fh:
+                recs.append(json.load(fh))
+        assert {r["mesh"] for r in recs} == {"pod256", "pod512"}
+        for r in recs:
+            assert r["ok"], r.get("error")
+            assert r["chips"] in (256, 512)
+            assert r["per_device_bytes"] > 0

@@ -1,0 +1,82 @@
+"""Valid-path constraint: trie masks (host + device), workspace reuse."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.item_trie import MASK_NEG, ItemTrie, MaskWorkspace
+from repro.data.items import gen_catalog
+
+
+@pytest.fixture(scope="module")
+def trie():
+    catalog = gen_catalog(500, 512, 3, seed=0)
+    return ItemTrie(catalog, 512), catalog
+
+
+def test_dense_mask0_exact(trie):
+    t, catalog = trie
+    valid_t0 = set(catalog[:, 0].tolist())
+    m = t.host_masks(0, None)
+    for v in range(512):
+        assert (m[v] == 0.0) == (v in valid_t0)
+
+
+@pytest.mark.parametrize("step", [1, 2])
+def test_host_masks_exact(trie, step):
+    t, catalog = trie
+    rng = np.random.default_rng(step)
+    # half valid prefixes, half garbage
+    rows = rng.choice(len(catalog), size=6)
+    pref_valid = catalog[rows][:, :step]
+    pref_bad = rng.integers(0, 512, size=(6, step))
+    prefixes = np.stack([pref_valid, pref_bad], axis=0)     # (R=2, BW=6, step)
+    m = t.host_masks(step, prefixes)
+    for r in range(2):
+        for b in range(6):
+            pref = tuple(prefixes[r, b])
+            valid_next = {tuple(row)[step] for row in catalog
+                          if tuple(row)[:step] == pref}
+            got = set(np.nonzero(m[r, b] == 0.0)[0].tolist())
+            assert got == valid_next
+
+
+@pytest.mark.parametrize("step", [1, 2])
+def test_device_masks_match_host(trie, step):
+    t, catalog = trie
+    rng = np.random.default_rng(step + 10)
+    prefixes = np.concatenate([
+        catalog[rng.choice(len(catalog), 8)][:, :step],
+        rng.integers(0, 512, size=(8, step)),
+    ]).reshape(2, 8, step)
+    host = t.host_masks(step, prefixes)
+    dev = np.asarray(t.device_masks(step, jnp.asarray(prefixes, jnp.int32)))
+    np.testing.assert_array_equal(host == 0.0, dev == 0.0)
+
+
+def test_workspace_dense_then_sparse_consistent(trie):
+    t, catalog = trie
+    rng = np.random.default_rng(0)
+    ws = MaskWorkspace(2, 4, 512)
+    p1 = catalog[rng.choice(len(catalog), 8)][:, :1].reshape(2, 4, 1)
+    m1 = ws.dense_fill(t, 1, p1).copy()
+    np.testing.assert_array_equal(m1, t.host_masks(1, p1))
+    p2 = catalog[rng.choice(len(catalog), 8)][:, :2].reshape(2, 4, 2)
+    m2 = ws.sparse_update(t, 2, p2)
+    np.testing.assert_array_equal(m2, t.host_masks(2, p2))
+    # repeated sparse updates stay exact (undo bookkeeping)
+    for seed in range(3):
+        rng2 = np.random.default_rng(seed)
+        p = catalog[rng2.choice(len(catalog), 8)][:, :2].reshape(2, 4, 2)
+        m = ws.sparse_update(t, 2, p)
+        np.testing.assert_array_equal(m, t.host_masks(2, p))
+
+
+def test_invalid_prefix_masks_everything(trie):
+    t, catalog = trie
+    # a prefix that cannot exist: vocab-1 repeated is unlikely; force check
+    bogus = np.full((1, 1, 2), 511, np.int64)
+    exists = any(tuple(r[:2]) == (511, 511) for r in catalog)
+    if not exists:
+        m = t.host_masks(2, bogus)
+        assert np.all(m == MASK_NEG)

@@ -1,0 +1,90 @@
+"""Pallas beam-attention kernel: shape/dtype sweep vs the pure-jnp oracle
+(ref.py), in interpret mode (TPU is the target; CPU executes the kernel body).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.xattention import staged_beam_attention
+from repro.kernels.beam_attn.ops import beam_attention, pick_block_s
+from repro.kernels.beam_attn.ref import beam_attention_ref
+
+SHAPES = [
+    # R, BW, H, kvH, hd, S, ND, step
+    (1, 4, 4, 4, 64, 64, 3, 0),
+    (2, 8, 4, 2, 64, 40, 3, 1),
+    (1, 16, 8, 8, 128, 300, 3, 2),
+    (2, 16, 16, 2, 64, 256, 3, 2),     # extreme GQA (qwen2.5-style)
+    (1, 64, 8, 4, 128, 513, 4, 3),     # non-aligned S
+    (1, 128, 12, 12, 64, 777, 3, 2),   # onerec-like wide beam
+]
+
+
+def _mk(rng, R, BW, H, kvH, hd, S, ND, dtype):
+    q = jnp.asarray(rng.normal(size=(R, BW, H, hd)), dtype)
+    sk = jnp.asarray(rng.normal(size=(R, S, kvH, hd)), dtype)
+    sv = jnp.asarray(rng.normal(size=(R, S, kvH, hd)), dtype)
+    slen = jnp.asarray(rng.integers(1, S + 1, size=(R,)), jnp.int32)
+    uk = jnp.asarray(rng.normal(size=(R, BW, ND, kvH, hd)), dtype)
+    uv = jnp.asarray(rng.normal(size=(R, BW, ND, kvH, hd)), dtype)
+    return q, sk, sv, slen, uk, uv
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_oracle(shape, dtype):
+    R, BW, H, kvH, hd, S, ND, step = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    q, sk, sv, slen, uk, uv = _mk(rng, R, BW, H, kvH, hd, S, ND, dtype)
+    st = jnp.int32(step)
+    out_k = beam_attention(q, sk, sv, slen, uk, uv, st)
+    out_ref = staged_beam_attention(q, sk, sv, slen, uk, uv, st)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_kernel_layout_ref_agrees():
+    """ref.py (kernel layout) == core.xattention (engine layout)."""
+    R, BW, H, kvH, hd, S, ND, step = 2, 8, 8, 4, 64, 96, 3, 1
+    rng = np.random.default_rng(0)
+    q, sk, sv, slen, uk, uv = _mk(rng, R, BW, H, kvH, hd, S, ND, jnp.float32)
+    G = H // kvH
+    M = BW * G
+    qk = q.reshape(R, BW, kvH, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        R, kvH, M, hd)
+    out_ref = beam_attention_ref(
+        qk, sk.transpose(0, 2, 1, 3), sv.transpose(0, 2, 1, 3), slen,
+        uk.transpose(0, 3, 1, 2, 4), uv.transpose(0, 3, 1, 2, 4),
+        jnp.int32(step), 1.0 / math.sqrt(hd))
+    out_eng = staged_beam_attention(q, sk, sv, slen, uk, uv, jnp.int32(step))
+    back = np.asarray(out_ref).reshape(R, kvH, BW, G, hd).transpose(
+        0, 2, 1, 3, 4).reshape(R, BW, H, hd)
+    np.testing.assert_allclose(back, np.asarray(out_eng), atol=2e-5, rtol=2e-5)
+
+
+def test_block_size_sweep():
+    """Kernel result must not depend on the block size."""
+    R, BW, H, kvH, hd, S, ND, step = 1, 8, 4, 4, 64, 500, 3, 2
+    rng = np.random.default_rng(3)
+    q, sk, sv, slen, uk, uv = _mk(rng, R, BW, H, kvH, hd, S, ND, jnp.float32)
+    st = jnp.int32(step)
+    ref = None
+    for bs in (128, 256, 512):
+        out = beam_attention(q, sk, sv, slen, uk, uv, st, block_s=bs)
+        if ref is None:
+            ref = out
+        else:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=1e-5)
+
+
+def test_pick_block_s_bounds():
+    for S in (64, 512, 32768):
+        bs = pick_block_s(S, 128, 256)
+        assert 128 <= bs <= max(S, 128)

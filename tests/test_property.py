@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import GRConfig
+from repro.core.kv_cache import (execute_plan, execute_two_pass,
+                                 is_two_pass_safe, make_inplace_plan)
+from repro.core.xattention import merge_partials
+from repro.core.xbeam import beam_step, init_beam_state
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# In-place reorder plan == gather, for ARBITRARY parent maps (duplicates ok)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=16))
+def test_inplace_plan_is_gather(parent_raw):
+    n = len(parent_raw)
+    parent = [p % n for p in parent_raw]
+    buf = np.arange(n, dtype=np.float32)[:, None] * 10.0
+    want = buf[np.asarray(parent)]
+    plan, spills = make_inplace_plan(parent)
+    got = execute_plan(buf.copy(), plan, spills)
+    np.testing.assert_array_equal(got, want)
+    # and whenever the paper's two-pass is safe, it agrees too
+    if is_two_pass_safe(parent):
+        np.testing.assert_array_equal(
+            execute_two_pass(buf.copy(), parent), want)
+
+
+# ---------------------------------------------------------------------------
+# OnlineSoftmax merge of arbitrary splits == one softmax over the union
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_online_softmax_merge(n1, n2, seed):
+    rng = np.random.default_rng(seed)
+    rows = 4
+    hd = 8
+    s = rng.normal(size=(rows, n1 + n2)).astype(np.float32) * 5.0
+    v = rng.normal(size=(rows, n1 + n2, hd)).astype(np.float32)
+
+    def part(sl):
+        sc = jnp.asarray(s[:, sl])
+        vv = jnp.asarray(v[:, sl])
+        m = jnp.max(sc, -1)
+        p = jnp.exp(sc - m[:, None])
+        l = jnp.sum(p, -1)
+        o = jnp.einsum("rt,rtd->rd", p, vv)
+        return m, l, o
+
+    merged = merge_partials([part(slice(0, n1)), part(slice(n1, n1 + n2))])
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("rt,rtd->rd", p, v)
+    np.testing.assert_allclose(np.asarray(merged), ref, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Beam step invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(2, 8), st.integers(8, 40), st.integers(0, 2**31 - 1))
+def test_beam_step_invariants(bw, v, seed):
+    rng = np.random.default_rng(seed)
+    gr = GRConfig(beam_width=bw, top_k=min(8, v), num_decode_phases=3)
+    state = init_beam_state(1, gr)
+    lp = np.sort(rng.normal(size=(1, bw)))[:, ::-1].astype(np.float32)
+    state = type(state)(tokens=state.tokens,
+                        log_probs=jnp.asarray(lp.copy()),
+                        step=jnp.int32(1))
+    logits = jnp.asarray(rng.normal(size=(1, bw, v)), jnp.float32)
+    new, parent = beam_step(state, logits, jnp.float32(0.0), gr)
+    nlp = np.asarray(new.log_probs[0])
+    # descending
+    assert np.all(np.diff(nlp) <= 1e-6)
+    # monotone: each new lp <= its parent's lp (log_softmax <= 0)
+    par = np.asarray(parent[0])
+    assert np.all(nlp <= lp[0][par] + 1e-5)
+    # parents in range, tokens in vocab
+    assert par.min() >= 0 and par.max() < bw
+    toks = np.asarray(new.tokens[0, :, 1])
+    assert toks.min() >= 0 and toks.max() < v
+    # no (parent, token) duplicates
+    assert len({(int(a), int(b)) for a, b in zip(par, toks)}) == bw
+
+
+# ---------------------------------------------------------------------------
+# Masked beam step never selects an invalid token
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_masked_beam_step_validity(bw, seed):
+    rng = np.random.default_rng(seed)
+    v = 32
+    gr = GRConfig(beam_width=bw, top_k=bw, num_decode_phases=3)
+    valid = np.zeros(v, bool)
+    valid[rng.choice(v, size=bw + 2, replace=False)] = True
+    mask = jnp.asarray(np.where(valid, 0.0, -1e9), jnp.float32)
+    state = init_beam_state(1, gr)
+    logits = jnp.asarray(rng.normal(size=(1, bw, v)), jnp.float32)
+    new, _ = beam_step(state, logits, mask[None, None], gr)
+    toks = np.asarray(new.tokens[0, :, 0])
+    assert valid[toks].all()

@@ -1,0 +1,67 @@
+"""xSchedule: batcher semantics, server report, dispatch accounting."""
+
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig
+from repro.serving.request import RequestState
+from repro.serving.scheduler import TokenCapacityBatcher, bucket_len
+
+
+def _req(rid, n, t):
+    return RequestState(rid, np.zeros(n, np.int32), t)
+
+
+def test_bucket_len_powers_of_two():
+    assert bucket_len(1) == 64
+    assert bucket_len(64) == 64
+    assert bucket_len(65) == 128
+    assert bucket_len(1000) == 1024
+
+
+def test_batcher_respects_token_capacity():
+    cfg = ServeConfig(max_batch_tokens=512, max_batch_requests=100,
+                      batch_wait_quota_ms=1000.0)
+    b = TokenCapacityBatcher(cfg)
+    for i in range(10):
+        b.add(_req(i, 100, 0.0), 0.0)      # bucket 128 -> 4 per batch max
+    plan = b.maybe_dispatch(0.0)
+    assert plan is not None and plan.size == 4
+    assert plan.padded_tokens <= 512
+
+
+def test_batcher_waits_for_quota():
+    cfg = ServeConfig(max_batch_tokens=10_000, max_batch_requests=100,
+                      batch_wait_quota_ms=5.0)
+    b = TokenCapacityBatcher(cfg)
+    b.add(_req(0, 10, 0.0), 0.0)
+    assert b.maybe_dispatch(0.001) is None          # under quota, no pressure
+    plan = b.maybe_dispatch(0.006)                  # quota expired
+    assert plan is not None and plan.size == 1
+
+
+def test_batcher_request_cap():
+    cfg = ServeConfig(max_batch_tokens=10**6, max_batch_requests=3,
+                      batch_wait_quota_ms=0.0)
+    b = TokenCapacityBatcher(cfg)
+    for i in range(7):
+        b.add(_req(i, 10, 0.0), 0.0)
+    sizes = []
+    while True:
+        p = b.maybe_dispatch(1.0, force=True)
+        if p is None:
+            break
+        sizes.append(p.size)
+    assert sizes == [3, 3, 1]
+
+
+def test_force_flush_drains_queue():
+    cfg = ServeConfig(max_batch_tokens=10**6, max_batch_requests=64,
+                      batch_wait_quota_ms=10_000.0)
+    b = TokenCapacityBatcher(cfg)
+    for i in range(5):
+        b.add(_req(i, 20, 0.0), 0.0)
+    assert b.maybe_dispatch(0.0) is None
+    plan = b.maybe_dispatch(0.0, force=True)
+    assert plan is not None and plan.size == 5
+    assert len(b) == 0

@@ -1,0 +1,105 @@
+"""End-to-end behaviour of the GR serving system (the paper's workload):
+prefill + 3×(beam+decode) with valid-path constraint, staged vs paged vs
+Pallas-kernel attention implementations, and the serving loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import GRDecoder, ItemTrie, MaskWorkspace
+from repro.data import gen_catalog, gen_histories, poisson_trace
+from repro.models import get_model
+from repro.serving import GREngine, run_server
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=8, top_k=8, num_decode_phases=3,
+                  num_items=300, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, gr, catalog, trie, model, params
+
+
+def _inputs(cfg, R=3, S=12, seed=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (R, S), 0,
+                                cfg.vocab_size)
+    lengths = jnp.asarray([S, S - 3, S - 1][:R], jnp.int32)
+    return tokens, lengths
+
+
+def test_generate_produces_only_valid_items(world):
+    cfg, gr, catalog, trie, model, params = world
+    dec = GRDecoder(cfg, gr, trie)
+    tokens, lengths = _inputs(cfg)
+    out = dec.generate(params, tokens, lengths, mode="graph")
+    items = np.asarray(out["items"])
+    valid = {tuple(r) for r in catalog.tolist()}
+    assert all(tuple(items[r, b]) in valid
+               for r in range(items.shape[0])
+               for b in range(items.shape[1]))
+    lp = np.asarray(out["log_probs"])
+    assert np.all(np.diff(lp, axis=1) <= 1e-6)       # descending
+    assert np.all(lp <= 1e-6)
+
+
+def test_graph_and_eager_agree(world):
+    cfg, gr, catalog, trie, model, params = world
+    dec = GRDecoder(cfg, gr, trie)
+    tokens, lengths = _inputs(cfg)
+    g = dec.generate(params, tokens, lengths, mode="graph")
+    ws = MaskWorkspace(tokens.shape[0], gr.beam_width, cfg.vocab_size)
+    e = dec.generate(params, tokens, lengths, mode="eager", workspace=ws)
+    np.testing.assert_allclose(np.asarray(g["log_probs"]),
+                               np.asarray(e["log_probs"]), atol=1e-3)
+
+
+def test_attention_impls_agree(world):
+    cfg, gr, catalog, trie, model, params = world
+    tokens, lengths = _inputs(cfg)
+    outs = {}
+    for impl in ("staged", "paged", "kernel"):
+        dec = GRDecoder(cfg, gr, trie, attention_impl=impl)
+        outs[impl] = dec.generate(params, tokens, lengths, mode="graph")
+    for impl in ("paged", "kernel"):
+        np.testing.assert_allclose(
+            np.asarray(outs["staged"]["log_probs"]),
+            np.asarray(outs[impl]["log_probs"]), atol=2e-3)
+
+
+def test_without_filter_invalid_items_appear(world):
+    """Paper Fig 5: without the valid-path constraint a large fraction of
+    generated items are hallucinated."""
+    cfg, gr, catalog, trie, model, params = world
+    dec = GRDecoder(cfg, gr, trie=None)
+    tokens, lengths = _inputs(cfg, seed=3)
+    out = dec.generate(params, tokens, lengths, mode="graph")
+    items = np.asarray(out["items"])
+    valid = {tuple(r) for r in catalog.tolist()}
+    frac_invalid = np.mean([tuple(items[r, b]) not in valid
+                            for r in range(items.shape[0])
+                            for b in range(items.shape[1])])
+    assert frac_invalid > 0.3      # ~50% in the paper; catalog is tiny here
+
+
+def test_server_end_to_end(world):
+    cfg, gr, catalog, trie, model, params = world
+    hist = gen_histories(catalog, 20, max_tokens=64, seed=1)
+    trace = poisson_trace(hist, rps=100.0, duration_s=0.3, seed=2)
+    scfg = ServeConfig(max_batch_tokens=1024, max_batch_requests=4,
+                       num_streams=2, batch_wait_quota_ms=5.0,
+                       graph_dispatch=True)
+    eng = GREngine(cfg, gr, params, trie, scfg)
+    rep = run_server(eng, trace, scfg)
+    assert rep.summary["requests"] == len(trace)
+    assert rep.engine_stats["dispatches_per_batch"] == 1.0
+    assert all(r.finish_s >= r.arrival_s for r in rep.requests)
+    valid = {tuple(r) for r in catalog.tolist()}
+    done = rep.requests[0]
+    assert all(tuple(it) in valid for it in done.items)
