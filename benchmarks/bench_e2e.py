@@ -18,7 +18,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import row
-from repro.config import GRConfig, ServeConfig
+from repro.config import EngineSpec, GRConfig, ServeConfig
 from repro.configs import get_config
 from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
@@ -37,19 +37,20 @@ def main():
     hist = gen_histories(catalog, 100, max_tokens=192, seed=1)
 
     variants = {
-        "xgr": dict(graph=True, impl="staged", streams=4),
-        "paged_baseline": dict(graph=False, impl="paged", streams=1),
+        "xgr": EngineSpec(backend="graph", attention_impl="staged",
+                          num_streams=4),
+        "paged_baseline": EngineSpec(backend="eager", attention_impl="paged",
+                                     num_streams=1, host_overlap=False),
     }
     for rps in (50, 100, 200):
         trace = poisson_trace(hist, rps=rps, duration_s=max(0.5, 40 / rps),
                               seed=2)
-        for name, v in variants.items():
+        for name, spec in variants.items():
             scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
-                               num_streams=v["streams"],
                                batch_wait_quota_ms=5.0,
-                               graph_dispatch=v["graph"])
-            eng = GREngine(cfg, gr, params, trie, scfg,
-                           attention_impl=v["impl"])
+                               num_streams=spec.num_streams,
+                               graph_dispatch=spec.backend == "graph")
+            eng = GREngine(cfg, gr, params, trie, scfg, spec=spec)
             rep = run_server(eng, trace, scfg)
             s = rep.summary
             row(f"fig13_{name}_rps{rps}",

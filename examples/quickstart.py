@@ -51,3 +51,22 @@ print(f"\ntop-5 recommendations for request 0 "
       f"{all(tuple(i) in valid for i in items.reshape(-1, 3))})")
 for b in range(5):
     print(f"  item TID={tuple(items[0, b])}  log_prob={lps[0, b]:.3f}")
+
+# 5. online serving: the same model behind the ServingSystem facade —
+#    submit requests as they arrive, step the clock, drain the tail
+from repro.config import EngineSpec, ServeConfig
+from repro.serving import GREngine, ServingSystem
+
+scfg = ServeConfig(max_batch_tokens=1024, max_batch_requests=4,
+                   num_streams=2)
+engine = GREngine(cfg, gr, params, trie, scfg,
+                  spec=EngineSpec(backend="graph", num_streams=2))
+system = ServingSystem(engine, scfg)          # policy from scfg
+handles = [system.submit(np.asarray(tokens[i, :lengths[i]]),
+                         arrival_s=0.001 * i) for i in range(R)]
+system.drain()
+res = handles[0].result()
+print(f"\nserved {len(handles)} requests online via "
+      f"{type(system.policy).__name__}: request 0 queued "
+      f"{res.queue_s * 1e3:.2f} ms, latency {res.latency_s * 1e3:.1f} ms, "
+      f"top item TID={tuple(res.items[0])}")

@@ -1,8 +1,10 @@
-"""End-to-end GR serving driver (deliverable b): Poisson traffic, token-
-capacity batching, multi-stream engine, SLO accounting — the paper's §9
-methodology at CPU scale.
+"""End-to-end GR serving via the online ``ServingSystem`` API: Poisson
+traffic fed incrementally through submit/step/drain, pluggable scheduler
+policy, multi-stream engine, SLO accounting — the paper's §9 methodology at
+CPU scale.
 
 Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
+      [--policy token-capacity|edf|bucket-affinity]
       [--baseline]   (PagedAttention-style pipeline instead of xGR)
 """
 
@@ -10,18 +12,21 @@ import argparse
 
 import jax
 
-from repro.config import GRConfig, ServeConfig
+from repro.config import EngineSpec, GRConfig, ServeConfig
 from repro.configs import get_config
 from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
-from repro.serving import GREngine, run_server
+from repro.serving import (GREngine, ServingSystem, available_policies,
+                           engine_summary, latency_summary)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rps", type=float, default=100.0)
     ap.add_argument("--seconds", type=float, default=1.0)
+    ap.add_argument("--policy", default="token-capacity",
+                    choices=available_policies())
     ap.add_argument("--baseline", action="store_true",
                     help="paged attention + per-phase dispatch + 1 stream")
     ap.add_argument("--beam-width", type=int, default=16)
@@ -39,31 +44,51 @@ def main():
     hist = gen_histories(catalog, 200, max_tokens=256, seed=1)
     trace = poisson_trace(hist, rps=args.rps, duration_s=args.seconds, seed=2)
     print(f"trace: {len(trace)} requests @ {args.rps} RPS")
+    if not trace:
+        print("empty trace (rps × seconds too small); nothing to serve")
+        return
 
     if args.baseline:
-        scfg = ServeConfig(num_streams=1, graph_dispatch=False,
-                           max_batch_tokens=4096, max_batch_requests=8)
-        eng = GREngine(cfg, gr, params, trie, scfg, attention_impl="paged")
+        spec = EngineSpec(backend="eager", attention_impl="paged",
+                          num_streams=1, host_overlap=False)
         name = "paged-baseline"
     else:
-        scfg = ServeConfig(num_streams=4, graph_dispatch=True,
-                           max_batch_tokens=4096, max_batch_requests=8)
-        eng = GREngine(cfg, gr, params, trie, scfg, attention_impl="staged")
+        spec = EngineSpec(backend="graph", attention_impl="staged",
+                          num_streams=4)
         name = "xGR"
+    scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
+                       scheduler_policy=args.policy,
+                       num_streams=spec.num_streams,
+                       graph_dispatch=spec.backend == "graph")
+    engine = GREngine(cfg, gr, params, trie, scfg, spec=spec)
 
-    rep = run_server(eng, trace, scfg)
-    s = rep.summary
-    print(f"\n[{name}]")
+    # --- the online request loop: submit -> step -> drain ------------------
+    system = ServingSystem(engine, scfg)
+    handles = []
+    for r in trace:                     # submit advances the clock to each
+        handles.append(system.submit(r.tokens, arrival_s=r.arrival_s))
+    system.drain()                      # flush the tail (quota-honoring)
+
+    results = [h.result() for h in handles]
+    duration = max(r.finish_s for r in results)
+    s = latency_summary([r.latency_s for r in results], duration)
+    viol = sum(1 for r in results if r.latency_s * 1e3 > scfg.slo_ms)
+    print(f"\n[{name} | policy={args.policy} | backend={spec.backend}]")
     print(f"  throughput : {s['throughput_rps']:.1f} req/s")
     print(f"  latency    : avg {s['avg_ms']:.1f} ms | p50 {s['p50_ms']:.1f} "
           f"| p99 {s['p99_ms']:.1f} | max {s['max_ms']:.1f}")
     print(f"  SLO ({scfg.slo_ms:.0f} ms p99): "
-          f"{rep.slo_violations}/{s['requests']} violations")
-    es = rep.engine_stats
+          f"{viol}/{s['requests']} violations")
+    es = engine_summary(engine.stats)
     print(f"  engine     : {es['batches']} batches, "
           f"{es['dispatches_per_batch']:.1f} dispatches/batch, "
           f"device {es['device_s']:.2f}s, host-mask {es['host_mask_s']:.2f}s, "
           f"compile {es['compile_s']:.1f}s (excluded from latency)")
+    r0 = results[0]
+    print(f"  request 0  : queue {r0.queue_s * 1e3:.2f} ms in a "
+          f"{int(r0.timing['batch_size'])}-request batch "
+          f"(bucket {int(r0.timing['bucket_len'])}), "
+          f"top item TID={tuple(r0.items[0])}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast test suite + one smoke serve through the ServingSystem
+# facade, so the serving front door is exercised on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests (-m 'not slow') =="
+python -m pytest -q -m "not slow"
+
+echo "== facade smoke: submit/step/drain =="
+python - <<'EOF'
+import jax, numpy as np
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.data import gen_catalog, gen_histories
+from repro.models import get_model
+from repro.serving import GREngine, ServingSystem, available_policies
+
+cfg = get_config("onerec-0.1b").reduced()
+gr = GRConfig(beam_width=8, top_k=8, num_decode_phases=3,
+              num_items=200, tid_vocab=cfg.vocab_size)
+catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+trie = ItemTrie(catalog, cfg.vocab_size)
+params = get_model(cfg).init(jax.random.PRNGKey(0))
+scfg = ServeConfig(max_batch_tokens=512, max_batch_requests=4, num_streams=2)
+engine = GREngine(cfg, gr, params, trie, scfg,
+                  spec=EngineSpec(backend="graph", num_streams=2))
+system = ServingSystem(engine, scfg)
+hist = gen_histories(catalog, 6, max_tokens=48, seed=1)
+handles = [system.submit(h, arrival_s=0.002 * i) for i, h in enumerate(hist)]
+system.step(system.now_s + 0.05)
+system.drain()
+assert all(h.done() for h in handles), "smoke: not all requests finished"
+valid = {tuple(r) for r in catalog.tolist()}
+res = handles[0].result()
+assert all(tuple(i) in valid for i in np.asarray(res.items)), "invalid items"
+print(f"smoke ok: {len(handles)} requests, policies={available_policies()}, "
+      f"p0 latency {res.latency_s*1e3:.1f} ms")
+EOF
+echo "CI OK"

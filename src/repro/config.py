@@ -245,6 +245,39 @@ class ServeConfig:
     batch_wait_quota_ms: float = 5.0 # max batching delay before forced dispatch
     num_streams: int = 4             # engine concurrency (multi-stream analogue)
     graph_dispatch: bool = True      # jit whole decode loop as one program
+    scheduler_policy: str = "token-capacity"  # see serving.scheduler registry
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Single point of execution choice for the engine (ISSUE 1 tentpole).
+
+    ``backend`` names an :class:`~repro.core.gr_decode.ExecutionBackend`
+    ("graph" = whole generate loop as one jitted program, "eager" =
+    per-phase dispatch with host mask generation).  ``host_overlap`` models
+    xSchedule's overlap of host mask generation with the device forward
+    pass on the eager path.
+    """
+
+    backend: str = "graph"           # "graph" | "eager"
+    attention_impl: str = "staged"   # "staged" | "paged" | "kernel"
+    num_streams: int = 4
+    host_overlap: bool = True
+
+    def __post_init__(self):
+        if self.backend not in ("graph", "eager"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.attention_impl not in ("staged", "paged", "kernel"):
+            raise ValueError(f"unknown attention_impl {self.attention_impl!r}")
+
+    @classmethod
+    def from_serve_config(cls, serve_cfg: "ServeConfig",
+                          attention_impl: str = "staged") -> "EngineSpec":
+        """Map the legacy ``graph_dispatch`` flag onto a backend name."""
+        return cls(backend="graph" if serve_cfg.graph_dispatch else "eager",
+                   attention_impl=attention_impl,
+                   num_streams=serve_cfg.num_streams,
+                   host_overlap=serve_cfg.num_streams > 1)
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Dict, Optional, Tuple
+import time
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +32,7 @@ import numpy as np
 
 from repro.config import GRConfig, ModelConfig
 from repro.core import xbeam
-from repro.core.item_trie import ItemTrie
+from repro.core.item_trie import ItemTrie, MaskWorkspace
 from repro.core.kv_cache import SeparatedCache, init_separated_cache, write_prefill
 from repro.core.xattention import paged_beam_attention, staged_beam_attention
 from repro.models.attention import gqa_qkv
@@ -54,6 +55,7 @@ class GRDecoder:
         assert attention_impl in ("staged", "paged", "kernel")
         self.attention_impl = attention_impl
         self.model = TransformerModel(cfg)
+        self._backends: Dict[str, "ExecutionBackend"] = {}
 
     # ------------------------------------------------------------ prefill
     def prefill(self, params, tokens: jax.Array, lengths: jax.Array,
@@ -128,6 +130,12 @@ class GRDecoder:
         return logits, new_cache
 
     # ------------------------------------------------------------ generate
+    def backend(self, mode: str) -> "ExecutionBackend":
+        """Cached :class:`ExecutionBackend` for ``mode`` ("graph"|"eager")."""
+        if mode not in self._backends:
+            self._backends[mode] = make_backend(mode, self)
+        return self._backends[mode]
+
     def generate(self, params, tokens: jax.Array, lengths: jax.Array,
                  mode: str = "graph", dtype=jnp.float32,
                  workspace=None) -> Dict[str, jax.Array]:
@@ -136,9 +144,9 @@ class GRDecoder:
         mode='graph': single jitted program, device-resident masks.
         mode='eager': per-phase dispatch with host (numpy) mask generation.
         Returns {"items": (R,BW,ND) int32, "log_probs": (R,BW) f32}."""
-        if mode == "graph":
-            return self._generate_graph(params, tokens, lengths, dtype=dtype)
-        return self._generate_eager(params, tokens, lengths, dtype, workspace)
+        out, _ = self.backend(mode).execute(params, tokens, lengths,
+                                            dtype=dtype, workspace=workspace)
+        return out
 
     @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("dtype",))
     def _generate_graph(self, params, tokens, lengths, dtype=jnp.float32):
@@ -161,35 +169,195 @@ class GRDecoder:
             state, parent = xbeam.beam_step(state, logits, mask, gr)
         return {"items": state.tokens, "log_probs": state.log_probs}
 
-    def _generate_eager(self, params, tokens, lengths, dtype, workspace):
-        gr = self.gr
-        R = tokens.shape[0]
-        prefill = jax.jit(lambda p, t, l: self.prefill(p, t, l, dtype))
-        step = jax.jit(self.decode_step, donate_argnums=(3,))
-        bstep = jax.jit(functools.partial(xbeam.beam_step, gr=self.gr))
 
-        logits0, cache = prefill(params, tokens, lengths)
-        state = xbeam.init_beam_state(R, gr)
-        if self.trie is not None:
-            mask0 = jnp.asarray(self.trie.host_masks(0, None))[None, None]
-        else:
-            mask0 = jnp.float32(0.0)
-        logits = jnp.broadcast_to(logits0[:, None, :],
-                                  (R, gr.beam_width, self.cfg.vocab_size))
-        state, parent = bstep(state, logits, mask0)
-        for d in range(1, gr.num_decode_phases):
-            prev = state.tokens[:, :, d - 1]
-            logits, cache = step(params, prev, parent, cache)
-            if self.trie is not None:
-                prefix = np.asarray(state.tokens[:, :, :d])
-                if workspace is not None:
-                    m = (workspace.sparse_update(self.trie, d, prefix)
-                         if d == gr.num_decode_phases - 1 else
-                         workspace.dense_fill(self.trie, d, prefix))
-                else:
-                    m = self.trie.host_masks(d, prefix)
-                mask = jnp.asarray(m)
+# ---------------------------------------------------------------------------
+# Execution backends (ISSUE 1 tentpole)
+#
+# One interface for the graph/eager split: a backend owns its compile cache,
+# warmup, and (eager) mask workspace, executes a padded batch, and returns
+# (outputs, timing).  The serving engine and ``GRDecoder.generate`` both go
+# through this interface — there is exactly one implementation of each
+# dispatch mode in the codebase.
+# ---------------------------------------------------------------------------
+
+#: timing keys every backend returns (seconds, except ``dispatches``)
+TIMING_KEYS = ("device_s", "host_mask_s", "critical_s", "compile_s",
+               "dispatches")
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """Executes one padded request batch end-to-end."""
+
+    name: str
+
+    def execute(self, params, tokens: jax.Array, lengths: jax.Array,
+                dtype=jnp.float32, workspace=None
+                ) -> Tuple[Dict[str, jax.Array], Dict[str, float]]:
+        """Returns ({"items", "log_probs"}, timing dict over TIMING_KEYS).
+
+        ``critical_s`` is the simulated-clock batch duration (host mask work
+        may overlap the device forward; see DESIGN.md §4)."""
+        ...
+
+
+class GraphBackend:
+    """Whole generate loop as ONE jitted XLA program per shape bucket.
+
+    Kernel-graph capture analogue: a single host->device dispatch per batch
+    with device-resident masks (paper §7 + §9.5)."""
+
+    name = "graph"
+
+    def __init__(self, decoder: "GRDecoder"):
+        self.decoder = decoder
+        self._warm: set = set()
+
+    def execute(self, params, tokens, lengths, dtype=jnp.float32,
+                workspace=None):
+        del workspace                      # graph mode: masks live on device
+        key = (tuple(tokens.shape), jnp.dtype(dtype).name)
+        compile_s = 0.0
+        if key not in self._warm:
+            t0 = time.perf_counter()
+            self.decoder._generate_graph(params, tokens, lengths, dtype=dtype
+                                         )["items"].block_until_ready()
+            compile_s = time.perf_counter() - t0
+            self._warm.add(key)
+        t0 = time.perf_counter()
+        out = self.decoder._generate_graph(params, tokens, lengths,
+                                           dtype=dtype)
+        out["items"].block_until_ready()
+        dt = time.perf_counter() - t0
+        return out, {"device_s": dt, "host_mask_s": 0.0, "critical_s": dt,
+                     "compile_s": compile_s, "dispatches": 1}
+
+
+class EagerBackend:
+    """Per-phase dispatch with host-side (numpy) mask generation.
+
+    ``host_overlap`` models xSchedule's overlap of host mask generation with
+    the device forward pass: the effective critical path per phase is
+    max(device_time, host_mask_time) instead of their sum."""
+
+    name = "eager"
+
+    def __init__(self, decoder: "GRDecoder", host_overlap: bool = False,
+                 capacity_hint: int = 0):
+        self.decoder = decoder
+        self.host_overlap = host_overlap
+        self.capacity_hint = capacity_hint
+        self._cache: Dict[tuple, tuple] = {}   # shape key -> jitted fns
+        self._workspace: Optional[MaskWorkspace] = None
+
+    def _programs(self, params, tokens, lengths, dtype):
+        """Per-shape jitted (prefill, step, bstep), warmed on first use."""
+        dec, gr, cfg = self.decoder, self.decoder.gr, self.decoder.cfg
+        key = (tuple(tokens.shape), jnp.dtype(dtype).name)
+        compile_s = 0.0
+        if key not in self._cache:
+            t0 = time.perf_counter()
+            prefill = jax.jit(lambda p, t, l: dec.prefill(p, t, l, dtype))
+            step = jax.jit(dec.decode_step, donate_argnums=(3,))
+            bstep = jax.jit(functools.partial(xbeam.beam_step, gr=gr))
+            # warm the full phase chain — including every mask shape bstep
+            # will see — so steady-state calls never compile
+            R = tokens.shape[0]
+            V = cfg.vocab_size
+            lo, ca = prefill(params, tokens, lengths)
+            st = xbeam.init_beam_state(R, gr)
+            lo2 = jnp.broadcast_to(lo[:, None, :], (R, gr.beam_width, V))
+            if dec.trie is None:
+                st2, par = bstep(st, lo2, jnp.zeros((), jnp.float32))
             else:
-                mask = jnp.float32(0.0)
+                st2, par = bstep(st, lo2,
+                                 jnp.zeros((1, 1, V), jnp.float32))
+                bstep(st2, lo2,
+                      jnp.zeros((R, gr.beam_width, V), jnp.float32))
+            step(params, st2.tokens[:, :, 0], par, ca)
+            compile_s = time.perf_counter() - t0
+            self._cache[key] = (prefill, step, bstep)
+        return self._cache[key] + (compile_s,)
+
+    def _get_workspace(self, R: int, workspace=None) -> MaskWorkspace:
+        if workspace is not None:
+            return workspace
+        gr, cfg = self.decoder.gr, self.decoder.cfg
+        if self._workspace is None or self._workspace.buf.shape[0] < R:
+            self._workspace = MaskWorkspace(max(R, self.capacity_hint),
+                                            gr.beam_width, cfg.vocab_size)
+        return self._workspace
+
+    def execute(self, params, tokens, lengths, dtype=jnp.float32,
+                workspace=None):
+        dec = self.decoder
+        gr, cfg, trie = dec.gr, dec.cfg, dec.trie
+        R = tokens.shape[0]
+        prefill, step, bstep, compile_s = self._programs(
+            params, tokens, lengths, dtype)
+        ws = self._get_workspace(R, workspace) if trie is not None else None
+
+        device_s = host_s = critical_s = 0.0
+        dispatches = 0
+
+        t0 = time.perf_counter()
+        logits0, cache = prefill(params, tokens, lengths)
+        logits0.block_until_ready()
+        dt = time.perf_counter() - t0
+        device_s += dt
+        critical_s += dt
+        dispatches += 1
+
+        state = xbeam.init_beam_state(R, gr)
+        if trie is not None:
+            mask = jnp.asarray(trie.host_masks(0, None))[None, None]
+        else:
+            mask = jnp.zeros((), jnp.float32)
+        logits = jnp.broadcast_to(logits0[:, None, :],
+                                  (R, gr.beam_width, cfg.vocab_size))
+        state, parent = bstep(state, logits, mask)
+        for d in range(1, gr.num_decode_phases):
+            t0 = time.perf_counter()
+            logits, cache = step(params, state.tokens[:, :, d - 1],
+                                 parent, cache)
+            logits.block_until_ready()
+            dev_dt = time.perf_counter() - t0
+            dispatches += 1
+
+            th = 0.0
+            if trie is not None:
+                t0 = time.perf_counter()
+                prefix = np.asarray(state.tokens[:, :, :d])
+                if d == gr.num_decode_phases - 1:
+                    m = ws.sparse_update(trie, d, prefix)
+                else:
+                    m = ws.dense_fill(trie, d, prefix)
+                mask = jnp.asarray(m)
+                th = time.perf_counter() - t0
+            device_s += dev_dt
+            host_s += th
+            # paper §7: mask generation overlaps the device forward
+            critical_s += max(dev_dt, th) if self.host_overlap \
+                else dev_dt + th
+            t0 = time.perf_counter()
             state, parent = bstep(state, logits, mask)
-        return {"items": state.tokens, "log_probs": state.log_probs}
+            bs_dt = time.perf_counter() - t0
+            device_s += bs_dt
+            critical_s += bs_dt
+            dispatches += 1
+        out = {"items": state.tokens, "log_probs": state.log_probs}
+        return out, {"device_s": device_s, "host_mask_s": host_s,
+                     "critical_s": critical_s, "compile_s": compile_s,
+                     "dispatches": dispatches}
+
+
+def make_backend(name: str, decoder: GRDecoder, host_overlap: bool = False,
+                 capacity_hint: int = 0) -> ExecutionBackend:
+    """Backend factory: the ONLY place a dispatch-mode name is interpreted."""
+    if name == "graph":
+        return GraphBackend(decoder)
+    if name == "eager":
+        return EagerBackend(decoder, host_overlap=host_overlap,
+                            capacity_hint=capacity_hint)
+    raise ValueError(f"unknown execution backend {name!r}; "
+                     f"have ['graph', 'eager']")

@@ -1,9 +1,18 @@
+from repro.serving.api import RequestHandle, ServeResult, ServingSystem
 from repro.serving.engine import GREngine, EngineStats
-from repro.serving.metrics import latency_summary, percentile
+from repro.serving.metrics import engine_summary, latency_summary, percentile
 from repro.serving.request import BatchPlan, RequestState
-from repro.serving.scheduler import TokenCapacityBatcher, bucket_len
+from repro.serving.scheduler import (BucketAffinityBatcher, EDFBatcher,
+                                     SchedulerPolicy, TokenCapacityBatcher,
+                                     available_policies, bucket_len,
+                                     make_policy, register_policy)
 from repro.serving.server import ServerReport, run_server
 
-__all__ = ["GREngine", "EngineStats", "latency_summary", "percentile",
-           "BatchPlan", "RequestState", "TokenCapacityBatcher", "bucket_len",
+__all__ = ["ServingSystem", "RequestHandle", "ServeResult",
+           "GREngine", "EngineStats",
+           "latency_summary", "engine_summary", "percentile",
+           "BatchPlan", "RequestState",
+           "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",
+           "BucketAffinityBatcher", "available_policies", "make_policy",
+           "register_policy", "bucket_len",
            "ServerReport", "run_server"]

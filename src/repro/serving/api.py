@@ -1,0 +1,225 @@
+"""Unified serving API: the ``ServingSystem`` facade (ISSUE 1 tentpole).
+
+The online request lifecycle of the xSchedule tier (paper §7) as a
+first-class API instead of a closed trace loop:
+
+    system = ServingSystem(engine)                  # policy from ServeConfig
+    h = system.submit(tokens)                       # -> RequestHandle
+    system.step(now_s)                              # advance the clock
+    results = system.drain()                        # flush + finish
+    h.result().items                                # typed ServeResult
+
+``submit`` enqueues a request with the configured :class:`SchedulerPolicy`;
+``step(now_s)`` advances the simulated clock to ``now_s``, dispatching every
+batch that becomes due on the way — capacity-triggered immediately, quota-
+triggered exactly at its deadline (the seed server could let a tail batch sit
+past its quota; the step loop walks *all* intermediate deadlines).  ``drain``
+flushes whatever is still queued, honoring each leftover batch's quota
+deadline before force-cutting it.
+
+Execution is whatever :class:`~repro.config.EngineSpec` the engine was built
+with — callers never branch on dispatch mode.  Batch *compute* durations are
+real measured wall-clock from the engine on this host; the simulated clock
+composes them with queueing and multi-stream contention (see DESIGN.md §2
+for why this is the honest CPU-scale reproduction of the paper's latency
+curves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.config import ServeConfig
+from repro.serving.engine import GREngine
+from repro.serving.request import BatchPlan, RequestState
+from repro.serving.scheduler import SchedulerPolicy, make_policy
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Typed result of one served request."""
+
+    rid: int
+    items: np.ndarray               # (BW, ND) generated item TIDs
+    log_probs: np.ndarray           # (BW,) descending
+    arrival_s: float
+    dispatch_s: float
+    finish_s: float
+    #: per-phase timing: ``queue_s`` (arrival -> batch start) plus the
+    #: batch's engine breakdown (device_s / host_mask_s / critical_s /
+    #: compile_s / dispatches) and shape (batch_size, bucket_len).
+    timing: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return self.dispatch_s - self.arrival_s
+
+
+class RequestHandle:
+    """Ticket returned by :meth:`ServingSystem.submit`."""
+
+    def __init__(self, system: "ServingSystem", state: RequestState):
+        self._system = system
+        self._state = state
+
+    @property
+    def rid(self) -> int:
+        return self._state.rid
+
+    def done(self) -> bool:
+        return self._state.finish_s is not None
+
+    def result(self) -> ServeResult:
+        """The :class:`ServeResult`; raises if the request has not finished
+        (call ``step``/``drain`` first — the clock only moves when told)."""
+        if not self.done():
+            raise RuntimeError(
+                f"request {self.rid} not finished; advance the clock with "
+                f"ServingSystem.step(now_s) or flush with drain()")
+        return self._system._results[self.rid]
+
+    def __repr__(self):
+        return f"RequestHandle(rid={self.rid}, done={self.done()})"
+
+
+class ServingSystem:
+    """Facade over scheduler policy + engine + multi-stream simulated clock.
+
+    ``policy`` may be a registered name, a :class:`SchedulerPolicy` instance,
+    or None to use ``serve_cfg.scheduler_policy``.
+    """
+
+    def __init__(self, engine: GREngine,
+                 serve_cfg: Optional[ServeConfig] = None,
+                 policy: Union[str, SchedulerPolicy, None] = None,
+                 min_bucket: int = 64):
+        self.engine = engine
+        self.serve_cfg = serve_cfg if serve_cfg is not None \
+            else engine.serve_cfg
+        if policy is None:
+            policy = self.serve_cfg.scheduler_policy
+        if isinstance(policy, str):
+            policy = make_policy(policy, self.serve_cfg, min_bucket)
+        self.policy: SchedulerPolicy = policy
+        self._streams = np.zeros(engine.spec.num_streams)  # busy-until times
+        self._now = 0.0
+        self._next_rid = 0
+        self._rids: set = set()
+        self._results: Dict[int, ServeResult] = {}
+        self.completed: List[RequestState] = []
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def now_s(self) -> float:
+        return self._now
+
+    def pending(self) -> int:
+        """Requests queued but not yet dispatched."""
+        return len(self.policy)
+
+    def submit(self, tokens: np.ndarray, arrival_s: Optional[float] = None,
+               rid: Optional[int] = None,
+               slo_ms: Optional[float] = None) -> RequestHandle:
+        """Enqueue one request; advances the clock to ``arrival_s``.
+
+        ``slo_ms`` sets a per-request deadline (used by the "edf" policy);
+        default is the config-wide ``serve_cfg.slo_ms``.
+        """
+        if arrival_s is None:
+            arrival_s = self._now
+        if arrival_s > self._now:
+            self.step(arrival_s)         # fire deadlines on the way
+        # the clock is monotonic: a late (out-of-order) submit enqueues now,
+        # but keeps its true arrival time so latency accounting stays honest
+        enqueue_at = max(arrival_s, self._now)
+        if rid is None:
+            rid = self._next_rid
+        elif rid in self._rids:
+            raise ValueError(f"duplicate rid {rid}")
+        self._rids.add(rid)
+        self._next_rid = max(self._next_rid, rid + 1)
+        deadline = arrival_s + slo_ms / 1e3 if slo_ms is not None else None
+        state = RequestState(rid, np.asarray(tokens, np.int32), arrival_s,
+                             deadline_s=deadline)
+        self.policy.add(state, enqueue_at)
+        # capacity-triggered dispatches (quota handled by step/drain)
+        while True:
+            plan = self.policy.maybe_dispatch(self._now)
+            if plan is None:
+                break
+            self._dispatch(plan, self._now)
+        return RequestHandle(self, state)
+
+    def step(self, now_s: Optional[float] = None) -> List[ServeResult]:
+        """Advance the simulated clock to ``now_s``, dispatching every batch
+        that becomes due on the way.  Returns results newly completed."""
+        if now_s is None:
+            now_s = self._now
+        newly: List[ServeResult] = []
+        while True:
+            deadline = self.policy.next_deadline()
+            if deadline is None or deadline > now_s:
+                break
+            t = max(deadline, self._now)
+            plan = self.policy.maybe_dispatch(t)
+            if plan is None:             # liveness: never spin on a deadline
+                plan = self.policy.maybe_dispatch(t, force=True)
+                if plan is None:
+                    break
+            self._now = t
+            newly.extend(self._dispatch(plan, t))
+        self._now = max(self._now, now_s)
+        while True:                      # anything due exactly at now_s
+            plan = self.policy.maybe_dispatch(self._now)
+            if plan is None:
+                break
+            newly.extend(self._dispatch(plan, self._now))
+        return newly
+
+    def drain(self) -> List[ServeResult]:
+        """Flush every queued request, honoring quota deadlines in the tail:
+        each leftover batch dispatches at its quota deadline (not early, not
+        sitting past it)."""
+        newly: List[ServeResult] = []
+        while len(self.policy):
+            deadline = self.policy.next_deadline()
+            t = self._now if deadline is None else max(self._now, deadline)
+            plan = self.policy.maybe_dispatch(t, force=True)
+            if plan is None:
+                break
+            self._now = t
+            newly.extend(self._dispatch(plan, t))
+        return newly
+
+    # ------------------------------------------------------------- internal
+    def _dispatch(self, plan: BatchPlan, now_s: float) -> List[ServeResult]:
+        timing = self.engine.run_batch(plan)     # real measured compute
+        sidx = int(np.argmin(self._streams))
+        start = max(now_s, self._streams[sidx])
+        dur = timing["critical_s"]
+        self._streams[sidx] = start + dur
+        out = []
+        for r in plan.requests:
+            r.dispatch_s = start
+            r.finish_s = start + dur
+            res = ServeResult(
+                rid=r.rid, items=r.items, log_probs=r.log_probs,
+                arrival_s=r.arrival_s, dispatch_s=start, finish_s=r.finish_s,
+                timing={"queue_s": start - r.arrival_s,
+                        "batch_size": float(plan.size),
+                        "bucket_len": float(plan.bucket_len), **timing})
+            self._results[r.rid] = res
+            self.completed.append(r)
+            out.append(res)
+        return out
+
+    def results(self) -> List[ServeResult]:
+        """All completed results, in completion order."""
+        return [self._results[r.rid] for r in self.completed]

@@ -1,37 +1,37 @@
 """xSchedule engine + worker tiers (paper §7).
 
-The engine owns the compiled programs and executes, per batch, one prefill
-followed by ND × (beam search + decode) — via the GR decoder.  Two dispatch
-modes mirror the paper's ablation:
+The engine owns an :class:`~repro.core.gr_decode.ExecutionBackend` and
+executes, per batch, one prefill followed by ND × (beam search + decode) —
+via the GR decoder.  The backend is selected by a single
+:class:`~repro.config.EngineSpec` (backend name + attention impl + stream
+count), which mirrors the paper's dispatch-mode ablation:
 
-  * ``graph_dispatch=True``  — the whole generate loop is ONE jitted XLA
-    program (kernel-graph capture analogue): a single host->device dispatch
-    per batch, device-resident masks.
-  * ``graph_dispatch=False`` — per-phase dispatch with host-side (numpy)
-    mask generation between phases.  ``host_overlap`` models xSchedule's
-    overlap of host mask generation with the device forward pass: with
-    overlap on, the effective critical path per phase is
-    max(device_time, host_mask_time) instead of their sum.
+  * ``backend="graph"`` — the whole generate loop is ONE jitted XLA program
+    (kernel-graph capture analogue): a single host->device dispatch per
+    batch, device-resident masks.
+  * ``backend="eager"`` — per-phase dispatch with host-side (numpy) mask
+    generation between phases.  ``host_overlap`` models xSchedule's overlap
+    of host mask generation with the device forward pass: with overlap on,
+    the effective critical path per phase is max(device_time, host_mask_time)
+    instead of their sum.
 
 Workers are the jitted executables themselves (one per padded shape bucket);
-the engine keeps a shape->executable table so steady-state traffic never
-recompiles.
+each backend keeps a shape->executable table so steady-state traffic never
+recompiles.  This module is the only place a dispatch-mode choice is made —
+no caller branches on ``graph_dispatch``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import GRConfig, ModelConfig, ServeConfig
-from repro.core.gr_decode import GRDecoder
-from repro.core.item_trie import ItemTrie, MaskWorkspace
-from repro.core.xbeam import beam_step, init_beam_state
+from repro.config import EngineSpec, GRConfig, ModelConfig, ServeConfig
+from repro.core.gr_decode import ExecutionBackend, GRDecoder, make_backend
+from repro.core.item_trie import ItemTrie
 from repro.serving.request import BatchPlan
 
 
@@ -40,25 +40,38 @@ class EngineStats:
     dispatches: int = 0
     batches: int = 0
     requests: int = 0
+    padded_tokens: int = 0          # sum of size × bucket over batches
+    prompt_tokens: int = 0          # sum of real prompt lengths
     device_s: float = 0.0
     host_mask_s: float = 0.0
     compile_s: float = 0.0
 
 
 class GREngine:
+    """Executes request batches through one :class:`ExecutionBackend`.
+
+    ``spec`` is the single point of execution choice; when omitted it is
+    derived from the legacy ``serve_cfg.graph_dispatch`` flag and the
+    ``attention_impl`` argument (kept for backwards compatibility).
+    """
+
     def __init__(self, cfg: ModelConfig, gr: GRConfig, params,
                  trie: Optional[ItemTrie], serve_cfg: ServeConfig,
-                 attention_impl: str = "staged"):
+                 attention_impl: str = "staged",
+                 spec: Optional[EngineSpec] = None):
         self.cfg = cfg
         self.gr = gr
         self.params = params
         self.trie = trie
         self.serve_cfg = serve_cfg
-        self.decoder = GRDecoder(cfg, gr, trie, attention_impl)
+        self.spec = spec if spec is not None else \
+            EngineSpec.from_serve_config(serve_cfg, attention_impl)
+        self.decoder = GRDecoder(cfg, gr, trie, self.spec.attention_impl)
+        self.backend: ExecutionBackend = make_backend(
+            self.spec.backend, self.decoder,
+            host_overlap=self.spec.host_overlap,
+            capacity_hint=serve_cfg.max_batch_requests)
         self.stats = EngineStats()
-        self._graph_cache: Dict[Tuple[int, int], object] = {}
-        self._eager_cache: Dict[Tuple[int, int], object] = {}
-        self._workspace: Optional[MaskWorkspace] = None
 
     # ---------------------------------------------------------------- utils
     def _pad_batch(self, plan: BatchPlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -75,10 +88,7 @@ class GREngine:
     def run_batch(self, plan: BatchPlan) -> Dict[str, float]:
         """Executes the batch, returns timing breakdown (seconds)."""
         tokens, lengths = self._pad_batch(plan)
-        if self.serve_cfg.graph_dispatch:
-            out, timing = self._run_graph(tokens, lengths)
-        else:
-            out, timing = self._run_eager(tokens, lengths)
+        out, timing = self.backend.execute(self.params, tokens, lengths)
         items = np.asarray(out["items"])
         lps = np.asarray(out["log_probs"])
         for i, r in enumerate(plan.requests):
@@ -86,105 +96,10 @@ class GREngine:
             r.log_probs = lps[i]
         self.stats.batches += 1
         self.stats.requests += plan.size
+        self.stats.padded_tokens += plan.padded_tokens
+        self.stats.prompt_tokens += sum(r.prompt_len for r in plan.requests)
+        self.stats.dispatches += int(timing["dispatches"])
+        self.stats.device_s += timing["device_s"]
+        self.stats.host_mask_s += timing["host_mask_s"]
+        self.stats.compile_s += timing["compile_s"]
         return timing
-
-    def _run_graph(self, tokens, lengths):
-        key = tuple(tokens.shape)
-        if key not in self._graph_cache:
-            t0 = time.perf_counter()
-            fn = jax.jit(lambda p, t, l: self.decoder._generate_graph(p, t, l))
-            fn(self.params, tokens, lengths)["items"].block_until_ready()
-            self.stats.compile_s += time.perf_counter() - t0
-            self._graph_cache[key] = fn
-        fn = self._graph_cache[key]
-        t0 = time.perf_counter()
-        out = fn(self.params, tokens, lengths)
-        out["items"].block_until_ready()
-        dt = time.perf_counter() - t0
-        self.stats.dispatches += 1                 # ONE dispatch per batch
-        self.stats.device_s += dt
-        return out, {"device_s": dt, "host_mask_s": 0.0, "critical_s": dt}
-
-    def _run_eager(self, tokens, lengths):
-        """Per-phase dispatch; host masks; overlap modeled on the timeline."""
-        gr, cfg = self.gr, self.cfg
-        R = tokens.shape[0]
-        key = tuple(tokens.shape)
-        if key not in self._eager_cache:
-            t0 = time.perf_counter()
-            prefill = jax.jit(lambda p, t, l: self.decoder.prefill(p, t, l))
-            step = jax.jit(self.decoder.decode_step)
-            bstep = jax.jit(lambda s, lo, m: beam_step(s, lo, m, gr))
-            self._eager_cache[key] = (prefill, step, bstep)
-            # warm up
-            lo, ca = prefill(self.params, tokens, lengths)
-            st = init_beam_state(R, gr)
-            m0 = jnp.zeros((), jnp.float32)
-            lo2 = jnp.broadcast_to(lo[:, None, :], (R, gr.beam_width,
-                                                    cfg.vocab_size))
-            st2, par = bstep(st, lo2, m0)
-            step(self.params, st2.tokens[:, :, 0], par, ca)
-            self.stats.compile_s += time.perf_counter() - t0
-        prefill, step, bstep = self._eager_cache[key]
-        if self._workspace is None or \
-                self._workspace.buf.shape[0] < R:
-            self._workspace = MaskWorkspace(
-                max(R, self.serve_cfg.max_batch_requests),
-                gr.beam_width, cfg.vocab_size)
-
-        device_s = 0.0
-        host_s = 0.0
-        critical_s = 0.0
-        dispatches = 0
-
-        t0 = time.perf_counter()
-        logits0, cache = prefill(self.params, tokens, lengths)
-        logits0.block_until_ready()
-        dt = time.perf_counter() - t0
-        device_s += dt
-        critical_s += dt
-        dispatches += 1
-
-        state = init_beam_state(R, gr)
-        if self.trie is not None:
-            mask = jnp.asarray(self.trie.host_masks(0, None))[None, None]
-        else:
-            mask = jnp.zeros((), jnp.float32)
-        logits = jnp.broadcast_to(logits0[:, None, :],
-                                  (R, gr.beam_width, cfg.vocab_size))
-        state, parent = bstep(state, logits, mask)
-        for d in range(1, gr.num_decode_phases):
-            t0 = time.perf_counter()
-            logits, cache = step(self.params, state.tokens[:, :, d - 1],
-                                 parent, cache)
-            logits.block_until_ready()
-            dev_dt = time.perf_counter() - t0
-            dispatches += 1
-
-            th = 0.0
-            if self.trie is not None:
-                t0 = time.perf_counter()
-                prefix = np.asarray(state.tokens[:, :, :d])
-                if d == gr.num_decode_phases - 1:
-                    m = self._workspace.sparse_update(self.trie, d, prefix)
-                else:
-                    m = self._workspace.dense_fill(self.trie, d, prefix)
-                mask = jnp.asarray(m)
-                th = time.perf_counter() - t0
-            device_s += dev_dt
-            host_s += th
-            # paper §7: mask generation overlaps the device forward
-            critical_s += max(dev_dt, th) if self.serve_cfg.num_streams > 1 \
-                else dev_dt + th
-            t0 = time.perf_counter()
-            state, parent = bstep(state, logits, mask)
-            bs_dt = time.perf_counter() - t0
-            device_s += bs_dt
-            critical_s += bs_dt
-            dispatches += 1
-        self.stats.dispatches += dispatches
-        self.stats.device_s += device_s
-        self.stats.host_mask_s += host_s
-        out = {"items": state.tokens, "log_probs": state.log_probs}
-        return out, {"device_s": device_s, "host_mask_s": host_s,
-                     "critical_s": critical_s}

@@ -13,6 +13,17 @@ def percentile(xs: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q))
 
 
+def engine_summary(stats) -> Dict[str, float]:
+    """Flatten :class:`~repro.serving.engine.EngineStats` for reports."""
+    return {
+        "dispatches": stats.dispatches, "batches": stats.batches,
+        "device_s": stats.device_s, "host_mask_s": stats.host_mask_s,
+        "compile_s": stats.compile_s,
+        "dispatches_per_batch": stats.dispatches / max(stats.batches, 1),
+        "pad_ratio": stats.padded_tokens / max(stats.prompt_tokens, 1),
+    }
+
+
 def latency_summary(latencies_s: Sequence[float],
                     duration_s: float) -> Dict[str, float]:
     arr = np.asarray(latencies_s, np.float64)

@@ -13,6 +13,7 @@ class RequestState:
     rid: int
     tokens: np.ndarray              # (len,) int32 prompt
     arrival_s: float
+    deadline_s: Optional[float] = None      # per-request SLO deadline (EDF)
     enqueue_s: Optional[float] = None
     dispatch_s: Optional[float] = None
     finish_s: Optional[float] = None

@@ -1,18 +1,32 @@
-"""xSchedule scheduler tier (paper §7).
+"""xSchedule scheduler tier (paper §7): pluggable batching policies.
 
-Token-capacity dynamic batching with an SLO wait quota: requests accumulate
-until either (a) adding the next request would exceed the padded-token
+A :class:`SchedulerPolicy` queues arriving requests and decides when to cut a
+:class:`BatchPlan`.  All shipped policies share the paper's dispatch
+*triggers* — (a) adding the next request would exceed the padded-token
 capacity or the request cap, or (b) the oldest queued request has waited the
-batching quota — then the batch dispatches immediately.  Prompt lengths are
-padded to power-of-two buckets so the engine compiles a bounded set of
-shapes (GR request sizes are power-law distributed; see data/synthetic.py).
+batching quota — and differ in batch *composition*:
+
+  * ``token-capacity``   — FIFO order (the paper's baseline batcher);
+  * ``edf``              — SLO-aware earliest-deadline-first: requests are
+                           batched in deadline order (deadline = arrival +
+                           per-request SLO, default ``cfg.slo_ms``), so
+                           tight-SLO traffic jumps the queue;
+  * ``bucket-affinity``  — groups prompts that pad to the same power-of-two
+                           bucket, cutting padded-token waste (a batch's cost
+                           is size × max bucket, so mixing a 64-bucket prompt
+                           into a 1024-bucket batch pays 16× its tokens).
+
+Prompt lengths are padded to power-of-two buckets so the engine compiles a
+bounded set of shapes (GR request sizes are power-law distributed; see
+data/synthetic.py).  Policies register by name in ``POLICIES`` and are
+selected via ``ServeConfig.scheduler_policy`` (see DESIGN.md §3).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Protocol, \
+    runtime_checkable
 
 from repro.config import ServeConfig
 from repro.serving.request import BatchPlan, RequestState
@@ -25,7 +39,66 @@ def bucket_len(n: int, min_bucket: int = 64) -> int:
     return b
 
 
+# ---------------------------------------------------------------------------
+# Policy protocol + registry
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class SchedulerPolicy(Protocol):
+    """Batching policy behind :class:`~repro.serving.api.ServingSystem`."""
+
+    def add(self, req: RequestState, now_s: float) -> None:
+        """Enqueue an arrived request at simulated time ``now_s``."""
+        ...
+
+    def maybe_dispatch(self, now_s: float, force: bool = False
+                       ) -> Optional[BatchPlan]:
+        """Cut one batch if a dispatch trigger holds (or ``force``)."""
+        ...
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest simulated time a quota-triggered dispatch becomes due
+        (None when the queue is empty).  The serving loop advances its clock
+        to this point when no arrivals land sooner (DESIGN.md §2)."""
+        ...
+
+    def __len__(self) -> int:
+        ...
+
+
+POLICIES: Dict[str, Callable[..., SchedulerPolicy]] = {}
+
+
+def register_policy(name: str):
+    def deco(cls):
+        POLICIES[name] = cls
+        cls.policy_name = name
+        return cls
+    return deco
+
+
+def make_policy(name: str, cfg: ServeConfig,
+                min_bucket: int = 64) -> SchedulerPolicy:
+    try:
+        ctor = POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown scheduler policy {name!r}; "
+                       f"have {available_policies()}") from None
+    return ctor(cfg, min_bucket)
+
+
+def available_policies() -> List[str]:
+    return sorted(POLICIES)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+@register_policy("token-capacity")
 class TokenCapacityBatcher:
+    """FIFO token-capacity dynamic batching with an SLO wait quota."""
+
     def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
         self.cfg = cfg
         self.min_bucket = min_bucket
@@ -42,13 +115,23 @@ class TokenCapacityBatcher:
         return ((len(batch) + 1) * blen > self.cfg.max_batch_tokens
                 or len(batch) + 1 > self.cfg.max_batch_requests)
 
+    def _oldest_enqueue_s(self) -> float:
+        """Enqueue time of the longest-waiting request (queue non-empty).
+        FIFO order makes it the head; reorder-on-add subclasses override."""
+        return self.queue[0].enqueue_s
+
+    def next_deadline(self) -> Optional[float]:
+        if not self.queue:
+            return None
+        return self._oldest_enqueue_s() + self.cfg.batch_wait_quota_ms / 1e3
+
     def maybe_dispatch(self, now_s: float, force: bool = False
                        ) -> Optional[BatchPlan]:
         """Returns a batch if capacity is reached or quota expired."""
         if not self.queue:
             return None
         quota = self.cfg.batch_wait_quota_ms / 1e3
-        oldest_wait = now_s - self.queue[0].enqueue_s
+        oldest_wait = now_s - self._oldest_enqueue_s()
         batch: List[RequestState] = []
         while self.queue:
             nxt = self.queue[0]
@@ -66,3 +149,101 @@ class TokenCapacityBatcher:
 
     def __len__(self):
         return len(self.queue)
+
+
+@register_policy("edf")
+class EDFBatcher(TokenCapacityBatcher):
+    """SLO-aware earliest-deadline-first batching.
+
+    The queue is kept sorted by request deadline (``arrival + slo``; per-
+    request SLOs via ``RequestState.deadline_s``, falling back to
+    ``cfg.slo_ms``).  Batch composition follows deadline order, so under
+    capacity pressure the most urgent requests dispatch first.  The wait
+    quota is still measured on enqueue time, keeping the dispatch cadence
+    comparable across policies.
+    """
+
+    def _deadline(self, req: RequestState) -> float:
+        if req.deadline_s is not None:
+            return req.deadline_s
+        return req.arrival_s + self.cfg.slo_ms / 1e3
+
+    def add(self, req: RequestState, now_s: float):
+        req.enqueue_s = now_s
+        dl = self._deadline(req)
+        # insert keeping deadline order (queues are short: <= a few batches)
+        pos = len(self.queue)
+        for i, q in enumerate(self.queue):
+            if dl < self._deadline(q):
+                pos = i
+                break
+        self.queue.insert(pos, req)
+
+    def _oldest_enqueue_s(self) -> float:
+        # deadline order != enqueue order, so the longest-waiting request
+        # (which arms the quota trigger) can sit anywhere in the queue
+        return min(r.enqueue_s for r in self.queue)
+
+
+@register_policy("bucket-affinity")
+class BucketAffinityBatcher:
+    """Groups same-bucket prompts to cut padding waste.
+
+    Per-bucket FIFO queues; a dispatch trigger fires when any single bucket
+    hits capacity or the globally-oldest request exceeds the wait quota, and
+    the cut batch draws from ONE bucket only — the oldest-request bucket on
+    quota/force, the full bucket on capacity — so every request in the batch
+    pads to its own bucket length (zero cross-bucket padding).
+    """
+
+    def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
+        self.cfg = cfg
+        self.min_bucket = min_bucket
+        self.buckets: Dict[int, Deque[RequestState]] = {}
+
+    def add(self, req: RequestState, now_s: float):
+        req.enqueue_s = now_s
+        b = bucket_len(req.prompt_len, self.min_bucket)
+        self.buckets.setdefault(b, deque()).append(req)
+
+    def _capacity(self, blen: int) -> int:
+        """Max batch size for a single-bucket batch of width ``blen``."""
+        by_tokens = max(1, self.cfg.max_batch_tokens // blen)
+        return min(by_tokens, self.cfg.max_batch_requests)
+
+    def _oldest_bucket(self) -> Optional[int]:
+        best, best_t = None, None
+        for b, q in self.buckets.items():
+            if q and (best_t is None or q[0].enqueue_s < best_t):
+                best, best_t = b, q[0].enqueue_s
+        return best
+
+    def next_deadline(self) -> Optional[float]:
+        b = self._oldest_bucket()
+        if b is None:
+            return None
+        return (self.buckets[b][0].enqueue_s
+                + self.cfg.batch_wait_quota_ms / 1e3)
+
+    def _cut(self, blen: int, now_s: float) -> BatchPlan:
+        q = self.buckets[blen]
+        cap = self._capacity(blen)
+        batch = [q.popleft() for _ in range(min(cap, len(q)))]
+        return BatchPlan(requests=batch, bucket_len=blen, formed_s=now_s)
+
+    def maybe_dispatch(self, now_s: float, force: bool = False
+                       ) -> Optional[BatchPlan]:
+        if not len(self):
+            return None
+        # capacity trigger: any bucket that can fill a whole batch
+        for b, q in self.buckets.items():
+            if len(q) >= self._capacity(b):
+                return self._cut(b, now_s)
+        quota = self.cfg.batch_wait_quota_ms / 1e3
+        oldest = self._oldest_bucket()
+        if force or (now_s - self.buckets[oldest][0].enqueue_s >= quota):
+            return self._cut(oldest, now_s)
+        return None
+
+    def __len__(self):
+        return sum(len(q) for q in self.buckets.values())

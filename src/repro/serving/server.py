@@ -1,31 +1,35 @@
-"""Simulated-clock GR serving loop (paper §9 end-to-end methodology).
+"""Trace-replay driver over the online ``ServingSystem`` API (paper §9).
 
-Arrivals follow a Poisson trace; the batcher forms token-capacity batches;
-``num_streams`` engine streams execute batches concurrently (the multi-stream
-tier of xSchedule — on TPU this corresponds to concurrent request batches in
-flight; see DESIGN.md §2).  Batch *compute* durations are real measured
-wall-clock from the engine on this host; the simulated clock composes them
-with queueing and stream contention, which is what the paper's latency-vs-RPS
-curves measure.
+Arrivals follow a Poisson trace; the configured scheduler policy forms
+batches; ``num_streams`` engine streams execute batches concurrently (the
+multi-stream tier of xSchedule — on TPU this corresponds to concurrent
+request batches in flight; see DESIGN.md §2).  Batch *compute* durations are
+real measured wall-clock from the engine on this host; the simulated clock
+composes them with queueing and stream contention, which is what the paper's
+latency-vs-RPS curves measure.
 
 Rationale: this container has no accelerator, and the paper's regime is
 host-overhead-bound small models — so measured-CPU-compute + simulated
 concurrency gives honest *relative* comparisons between xGR configurations
 and the PagedAttention-style baseline.
+
+``run_server`` is intentionally thin: it feeds the trace through
+``ServingSystem.submit`` arrival by arrival (``submit`` advances the clock,
+firing quota deadlines on the way) and flushes the tail with ``drain`` —
+which honors the final batches' quota deadlines instead of flushing early or
+letting them sit (the seed loop's clock-advance edge case).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import Dict, List
 
 from repro.config import ServeConfig
+from repro.serving.api import ServingSystem
 from repro.serving.engine import GREngine
-from repro.serving.metrics import latency_summary
+from repro.serving.metrics import engine_summary, latency_summary
 from repro.serving.request import RequestState
-from repro.serving.scheduler import TokenCapacityBatcher
 
 
 @dataclasses.dataclass
@@ -44,58 +48,16 @@ class ServerReport:
 def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
                min_bucket: int = 64) -> ServerReport:
     """trace: list of data.synthetic.GRRequest (arrival_s sorted)."""
-    batcher = TokenCapacityBatcher(serve_cfg, min_bucket)
-    streams = np.zeros(serve_cfg.num_streams)        # busy-until times
-    done: List[RequestState] = []
-    pending = [RequestState(r.rid, r.tokens, r.arrival_s) for r in trace]
-    pending.sort(key=lambda r: r.arrival_s)
-    i = 0
-    now = 0.0
-    horizon = pending[-1].arrival_s if pending else 0.0
-
-    def dispatch(plan, now_s):
-        timing = engine.run_batch(plan)              # real measured compute
-        sidx = int(np.argmin(streams))
-        start = max(now_s, streams[sidx])
-        dur = timing["critical_s"]
-        streams[sidx] = start + dur
-        for r in plan.requests:
-            r.dispatch_s = start
-            r.finish_s = start + dur
-            done.append(r)
-
-    while i < len(pending) or len(batcher):
-        if i < len(pending):
-            now = pending[i].arrival_s
-            batcher.add(pending[i], now)
-            i += 1
-        # dispatch while capacity/quota conditions hold
-        while True:
-            plan = batcher.maybe_dispatch(now, force=(i >= len(pending)))
-            if plan is None:
-                break
-            dispatch(plan, now)
-        # if queue is non-empty and no more arrivals soon, advance the clock
-        if len(batcher) and i < len(pending):
-            quota = serve_cfg.batch_wait_quota_ms / 1e3
-            deadline = batcher.queue[0].enqueue_s + quota
-            if pending[i].arrival_s > deadline:
-                now = deadline
-                plan = batcher.maybe_dispatch(now)
-                if plan is not None:
-                    dispatch(plan, now)
-
+    system = ServingSystem(engine, serve_cfg, min_bucket=min_bucket)
+    for r in sorted(trace, key=lambda r: r.arrival_s):
+        system.submit(r.tokens, arrival_s=r.arrival_s, rid=r.rid)
+    system.drain()
+    done = system.completed
     duration = max((r.finish_s for r in done), default=0.0)
     lat = [r.latency_s for r in done]
-    st = engine.stats
     return ServerReport(
         summary=latency_summary(lat, duration),
         requests=done,
-        engine_stats={
-            "dispatches": st.dispatches, "batches": st.batches,
-            "device_s": st.device_s, "host_mask_s": st.host_mask_s,
-            "compile_s": st.compile_s,
-            "dispatches_per_batch": st.dispatches / max(st.batches, 1),
-        },
+        engine_stats=engine_summary(engine.stats),
         slo_ms=serve_cfg.slo_ms,
     )
