@@ -36,7 +36,8 @@ def row(name: str, us_per_call: float, derived: str):
 
 def flops_bytes(fn, *args) -> dict:
     """cost_analysis of a jitted callable on the current (1-dev) backend."""
+    from repro.roofline.analysis import cost_analysis_dict
     lowered = jax.jit(fn).lower(*args)
-    ca = lowered.compile().cost_analysis()
+    ca = cost_analysis_dict(lowered.compile())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0))}

@@ -4,7 +4,8 @@ policy, multi-stream engine, SLO accounting — the paper's §9 methodology at
 CPU scale.
 
 Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
-      [--policy token-capacity|edf|bucket-affinity]
+      [--policy token-capacity|edf|bucket-affinity|chunked]
+      [--chunk-tokens 256]   (per-step budget of the chunked policy)
       [--baseline]   (PagedAttention-style pipeline instead of xGR)
 """
 
@@ -18,7 +19,7 @@ from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
 from repro.serving import (GREngine, ServingSystem, available_policies,
-                           engine_summary, latency_summary)
+                           engine_summary, latency_summary, ttft_summary)
 
 
 def main():
@@ -30,6 +31,8 @@ def main():
     ap.add_argument("--baseline", action="store_true",
                     help="paged attention + per-phase dispatch + 1 stream")
     ap.add_argument("--beam-width", type=int, default=16)
+    ap.add_argument("--chunk-tokens", type=int, default=256,
+                    help="per-step token budget (chunked policy)")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -59,7 +62,8 @@ def main():
     scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
                        scheduler_policy=args.policy,
                        num_streams=spec.num_streams,
-                       graph_dispatch=spec.backend == "graph")
+                       graph_dispatch=spec.backend == "graph",
+                       prefill_chunk_tokens=args.chunk_tokens)
     engine = GREngine(cfg, gr, params, trie, scfg, spec=spec)
 
     # --- the online request loop: submit -> step -> drain ------------------
@@ -77,6 +81,9 @@ def main():
     print(f"  throughput : {s['throughput_rps']:.1f} req/s")
     print(f"  latency    : avg {s['avg_ms']:.1f} ms | p50 {s['p50_ms']:.1f} "
           f"| p99 {s['p99_ms']:.1f} | max {s['max_ms']:.1f}")
+    t = ttft_summary([r.ttft_s for r in results])
+    print(f"  ttft       : avg {t['ttft_avg_ms']:.1f} ms "
+          f"| p99 {t['ttft_p99_ms']:.1f} (== latency under monolithic)")
     print(f"  SLO ({scfg.slo_ms:.0f} ms p99): "
           f"{viol}/{s['requests']} violations")
     es = engine_summary(engine.stats)
@@ -85,9 +92,13 @@ def main():
           f"device {es['device_s']:.2f}s, host-mask {es['host_mask_s']:.2f}s, "
           f"compile {es['compile_s']:.1f}s (excluded from latency)")
     r0 = results[0]
-    print(f"  request 0  : queue {r0.queue_s * 1e3:.2f} ms in a "
-          f"{int(r0.timing['batch_size'])}-request batch "
-          f"(bucket {int(r0.timing['bucket_len'])}), "
+    if "batch_size" in r0.timing:
+        shape = (f"in a {int(r0.timing['batch_size'])}-request batch "
+                 f"(bucket {int(r0.timing['bucket_len'])})")
+    else:
+        shape = (f"finishing in a {int(r0.timing['step_tokens'])}-token "
+                 f"mixed step")
+    print(f"  request 0  : queue {r0.queue_s * 1e3:.2f} ms {shape}, "
           f"top item TID={tuple(r0.items[0])}")
 
 

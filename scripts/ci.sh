@@ -39,4 +39,40 @@ assert all(tuple(i) in valid for i in np.asarray(res.items)), "invalid items"
 print(f"smoke ok: {len(handles)} requests, policies={available_policies()}, "
       f"p0 latency {res.latency_s*1e3:.1f} ms")
 EOF
+
+echo "== chunked smoke: 2-chunk staged prefill through the facade =="
+python - <<'EOF'
+import jax, numpy as np
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.data import gen_catalog, gen_histories
+from repro.models import get_model
+from repro.serving import GREngine, ServingSystem
+
+cfg = get_config("onerec-0.1b").reduced()
+gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+              num_items=100, tid_vocab=cfg.vocab_size)
+catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+trie = ItemTrie(catalog, cfg.vocab_size)
+params = get_model(cfg).init(jax.random.PRNGKey(0))
+# prefill_chunk_tokens=32 forces a 48-token prompt into 2 chunks
+scfg = ServeConfig(max_batch_requests=4, scheduler_policy="chunked",
+                   prefill_chunk_tokens=32)
+engine = GREngine(cfg, gr, params, trie, scfg,
+                  spec=EngineSpec(backend="graph", num_streams=1))
+system = ServingSystem(engine, scfg)
+hist = gen_histories(catalog, 3, max_tokens=48, min_tokens=40, seed=1)
+handles = [system.submit(h, arrival_s=0.001 * i) for i, h in enumerate(hist)]
+system.drain()
+assert all(h.done() for h in handles), "chunked smoke: unfinished requests"
+valid = {tuple(r) for r in catalog.tolist()}
+for h in handles:
+    res = h.result()
+    assert all(tuple(i) in valid for i in np.asarray(res.items)), "invalid"
+    assert res.ttft_s <= res.latency_s + 1e-9, "ttft must not exceed latency"
+print(f"chunked smoke ok: {len(handles)} requests, "
+      f"ttft0 {handles[0].result().ttft_s*1e3:.1f} ms, "
+      f"lat0 {handles[0].result().latency_s*1e3:.1f} ms")
+EOF
 echo "CI OK"

@@ -246,6 +246,10 @@ class ServeConfig:
     num_streams: int = 4             # engine concurrency (multi-stream analogue)
     graph_dispatch: bool = True      # jit whole decode loop as one program
     scheduler_policy: str = "token-capacity"  # see serving.scheduler registry
+    #: per-step token budget of the "chunked" mixed prefill/decode policy:
+    #: each engine step packs decode steps first, then prefill chunks, and
+    #: never exceeds this many tokens (paper §5 staged prefill)
+    prefill_chunk_tokens: int = 256
 
 
 @dataclass(frozen=True)

@@ -33,9 +33,11 @@ import numpy as np
 from repro.config import GRConfig, ModelConfig
 from repro.core import xbeam
 from repro.core.item_trie import ItemTrie, MaskWorkspace
-from repro.core.kv_cache import SeparatedCache, init_separated_cache, write_prefill
+from repro.core.kv_cache import (SeparatedCache, chunk_slots,
+                                 init_separated_cache, write_prefill,
+                                 write_prefill_chunk)
 from repro.core.xattention import paged_beam_attention, staged_beam_attention
-from repro.models.attention import gqa_qkv
+from repro.models.attention import gqa_qkv, mha
 from repro.models.common import apply_norm, dense
 from repro.models.mlp import apply_mlp
 from repro.models.model import TransformerModel
@@ -70,6 +72,70 @@ class GRDecoder:
         sep = write_prefill(sep, filled["dense"]["k"], filled["dense"]["v"],
                             lengths)
         return logits, sep
+
+    # ----------------------------------------------------- staged prefill
+    def prefill_chunk(self, params, tokens: jax.Array, offsets: jax.Array,
+                      lengths: jax.Array, cache: SeparatedCache
+                      ) -> Tuple[jax.Array, SeparatedCache]:
+        """One staged-prefill chunk (paper §5 unified prefill/decode).
+
+        tokens  : (R, C) chunk tokens, right-padded
+        offsets : (R,) absolute start position of each request's chunk —
+                  must equal the request's current ``shared_len``
+        lengths : (R,) valid tokens in this chunk (0 = request not scheduled
+                  this step; its cache passes through untouched)
+        cache   : separated cache holding every previously-written chunk
+
+        Each chunk query attends causally over the already-installed shared
+        KV (positions < offset) plus the earlier positions of its own chunk
+        — exactly the rows a monolithic prefill's causal mask exposes, so
+        the result is equivalent position-by-position (the equivalence
+        property test locks this down).  Returns (logits (R, V) at each
+        request's last valid chunk position — meaningful only on its final
+        chunk — and the cache with this chunk's KV installed and
+        ``shared_len`` advanced to ``offsets + lengths``)."""
+        cfg = self.cfg
+        R, C = tokens.shape
+        S = cache.shared_k.shape[2]
+        x = params["embed"][tokens]                          # (R, C, d)
+        hd = cfg.resolved_head_dim
+        rot = int(hd * cfg.rope_fraction) & ~1
+        pos = offsets[:, None] + jnp.arange(C)[None, :]      # (R, C) absolute
+        cos, sin = rope_angles(pos, rot, cfg.rope_theta)
+        scale = 1.0 / math.sqrt(hd)
+        slot = chunk_slots(offsets, lengths, C, S)
+        ridx = jnp.arange(R)[:, None]
+        # causal over absolute positions: key slot p visible to chunk query i
+        # iff p <= offset + i (prior chunks AND the intra-chunk prefix; slots
+        # past the written frontier are masked, so stale contents are inert)
+        vis = (jnp.arange(S)[None, None, :] <= pos[:, :, None]
+               )[:, None, None, :, :]                        # (R,1,1,C,S)
+
+        def layer_body(h, xs):
+            lp, sk, sv = xs                                  # sk (R,S,kvH,hd)
+            hn = apply_norm(lp["ln1"], h, cfg.norm_kind, cfg.norm_eps)
+            q, k, v = gqa_qkv(lp["attn"], hn, cfg)
+            if cfg.rope_kind == "rope":
+                q = apply_rope(q, cos, sin, cfg.rope_fraction)
+                k = apply_rope(k, cos, sin, cfg.rope_fraction)
+            sk = sk.at[ridx, slot].set(k.astype(sk.dtype), mode="drop")
+            sv = sv.at[ridx, slot].set(v.astype(sv.dtype), mode="drop")
+            a = mha(q, sk, sv, vis, scale)
+            h = h + dense(a.reshape(R, C, -1), lp["attn"]["wo"])
+            h = h + apply_mlp(lp["mlp"],
+                              apply_norm(lp["ln2"], h, cfg.norm_kind,
+                                         cfg.norm_eps), cfg.act_kind)
+            return h, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer_body, x,
+            (params["dense_layers"], cache.shared_k, cache.shared_v))
+        new_cache = write_prefill_chunk(cache, ks, vs, offsets, lengths)
+        x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        last = jnp.maximum(lengths - 1, 0)                   # len-0 guard
+        x_last = x[jnp.arange(R), last]
+        logits = self.model._logits(params, x_last).astype(jnp.float32)
+        return logits, new_cache
 
     # -------------------------------------------------------- decode phase
     def _attend(self, q, sk, sv, slen, uk, uv, dstep):
@@ -128,6 +194,47 @@ class GRDecoder:
         new_cache = dataclasses.replace(cache, unshared_k=uk, unshared_v=uv,
                                         step=dstep + 1)
         return logits, new_cache
+
+    # ------------------------------------------------- stepwise decode API
+    # One beam phase at a time, so the serving engine can interleave decode
+    # steps of in-flight requests with prefill chunks of arriving ones
+    # (continuous batching).  Masks are device-resident (graph-mode path).
+
+    def beam_phase0(self, logits0: jax.Array
+                    ) -> Tuple[xbeam.BeamState, jax.Array]:
+        """First beam expansion from prefill logits (R, V) — the TTFT point:
+        the request has produced its first scored continuations."""
+        gr = self.gr
+        R = logits0.shape[0]
+        state = xbeam.init_beam_state(R, gr)
+        mask0 = (self.trie.device_mask0()[None, None]
+                 if self.trie is not None else jnp.float32(0.0))
+        logits = jnp.broadcast_to(logits0[:, None, :],
+                                  (R, gr.beam_width, self.cfg.vocab_size))
+        return xbeam.beam_step(state, logits, mask0, gr)
+
+    def beam_phase(self, params, state: xbeam.BeamState, parent: jax.Array,
+                   cache: SeparatedCache, d: int
+                   ) -> Tuple[xbeam.BeamState, jax.Array, SeparatedCache]:
+        """Decode phase ``d`` (1..ND-1): one decode forward + beam step."""
+        logits, cache = self.decode_step(params, state.tokens[:, :, d - 1],
+                                         parent, cache)
+        if self.trie is not None:
+            mask = self.trie.device_masks(d, state.tokens[:, :, :d])
+        else:
+            mask = jnp.float32(0.0)
+        state, parent = xbeam.beam_step(state, logits, mask, self.gr)
+        return state, parent, cache
+
+    def decode_from_prefill(self, params, logits0: jax.Array,
+                            cache: SeparatedCache) -> Dict[str, jax.Array]:
+        """Full beam generation over an already-prefilled separated cache
+        (monolithic or chunked — the equivalence tests compare both)."""
+        state, parent = self.beam_phase0(logits0)
+        for d in range(1, self.gr.num_decode_phases):
+            state, parent, cache = self.beam_phase(params, state, parent,
+                                                   cache, d)
+        return {"items": state.tokens, "log_probs": state.log_probs}
 
     # ------------------------------------------------------------ generate
     def backend(self, mode: str) -> "ExecutionBackend":

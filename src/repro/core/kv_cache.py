@@ -115,6 +115,48 @@ def write_prefill(cache: SeparatedCache, ks: jax.Array, vs: jax.Array,
         step=jnp.int32(0))
 
 
+def chunk_slots(offsets: jax.Array, lengths: jax.Array, chunk: int,
+                s_max: int) -> jax.Array:
+    """Per-request shared-cache slots for one prefill chunk.
+
+    Returns (R, chunk) int32: chunk position ``i`` of request ``r`` lands at
+    slot ``offsets[r] + i``; positions past ``lengths[r]`` (right padding)
+    map to ``s_max`` — out of bounds, so ``.at[...].set(mode="drop")``
+    discards them instead of clobbering live slots."""
+    pos = offsets[:, None] + jnp.arange(chunk)[None, :]
+    valid = jnp.arange(chunk)[None, :] < lengths[:, None]
+    return jnp.where(valid, pos, s_max).astype(jnp.int32)
+
+
+def write_prefill_chunk(cache: SeparatedCache, ks: jax.Array, vs: jax.Array,
+                        offsets: jax.Array, lengths: jax.Array
+                        ) -> SeparatedCache:
+    """Install one prompt chunk's KV at arbitrary per-request offsets.
+
+    ks/vs   : (L, R, C, kvH, hd) — post-RoPE chunk KV, right-padded on C
+    offsets : (R,) int32 — absolute start position of this chunk (must equal
+              the request's current ``shared_len``)
+    lengths : (R,) int32 — valid tokens of this chunk (0 = request skipped)
+
+    Unlike :func:`write_prefill` (whole prompt, replaces the buffer) this
+    fills the shared cache *incrementally*: untouched slots keep their
+    previous contents, so staged prefill over k chunks produces exactly the
+    cache a monolithic prefill would (the equivalence property test locks
+    this down).  ``shared_len`` advances to ``offsets + lengths``."""
+    R = ks.shape[1]
+    S_max = cache.shared_k.shape[2]
+    slot = chunk_slots(offsets, lengths, ks.shape[2], S_max)
+    ridx = jnp.arange(R)[:, None]
+    new_k = cache.shared_k.at[:, ridx, slot].set(
+        ks.astype(cache.shared_k.dtype), mode="drop")
+    new_v = cache.shared_v.at[:, ridx, slot].set(
+        vs.astype(cache.shared_v.dtype), mode="drop")
+    return dataclasses.replace(
+        cache, shared_k=new_k, shared_v=new_v,
+        shared_len=(offsets + lengths).astype(jnp.int32),
+        step=jnp.int32(0))
+
+
 def fork_and_append(cache: SeparatedCache, parent: jax.Array,
                     new_k: jax.Array, new_v: jax.Array) -> SeparatedCache:
     """Beam fork + token append, the xAttention unshared-cache update.

@@ -1,8 +1,11 @@
 from repro.serving.api import RequestHandle, ServeResult, ServingSystem
 from repro.serving.engine import GREngine, EngineStats
-from repro.serving.metrics import engine_summary, latency_summary, percentile
-from repro.serving.request import BatchPlan, RequestState
-from repro.serving.scheduler import (BucketAffinityBatcher, EDFBatcher,
+from repro.serving.metrics import (engine_summary, latency_summary,
+                                   percentile, ttft_summary)
+from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
+                                   StepPlan)
+from repro.serving.scheduler import (BucketAffinityBatcher,
+                                     ChunkedPrefillScheduler, EDFBatcher,
                                      SchedulerPolicy, TokenCapacityBatcher,
                                      available_policies, bucket_len,
                                      make_policy, register_policy)
@@ -10,9 +13,10 @@ from repro.serving.server import ServerReport, run_server
 
 __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
            "GREngine", "EngineStats",
-           "latency_summary", "engine_summary", "percentile",
-           "BatchPlan", "RequestState",
+           "latency_summary", "engine_summary", "percentile", "ttft_summary",
+           "BatchPlan", "RequestState", "Phase", "StepEntry", "StepPlan",
            "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",
-           "BucketAffinityBatcher", "available_policies", "make_policy",
+           "BucketAffinityBatcher", "ChunkedPrefillScheduler",
+           "available_policies", "make_policy",
            "register_policy", "bucket_len",
            "ServerReport", "run_server"]

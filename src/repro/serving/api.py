@@ -17,6 +17,12 @@ past its quota; the step loop walks *all* intermediate deadlines).  ``drain``
 flushes whatever is still queued, honoring each leftover batch's quota
 deadline before force-cutting it.
 
+Continuous policies (``"chunked"``, anything exposing ``plan_step``) replace
+whole-request batches with phase-tracked engine *steps*: ``step``/``drain``
+run :class:`~repro.serving.request.StepPlan`\\ s back-to-back — decode phases
+of in-flight requests mixed with prefill chunks of arriving ones — and
+``ServeResult.ttft_s`` reports time-to-first-beam-phase (DESIGN.md §6).
+
 Execution is whatever :class:`~repro.config.EngineSpec` the engine was built
 with — callers never branch on dispatch mode.  Batch *compute* durations are
 real measured wall-clock from the engine on this host; the simulated clock
@@ -34,7 +40,7 @@ import numpy as np
 
 from repro.config import ServeConfig
 from repro.serving.engine import GREngine
-from repro.serving.request import BatchPlan, RequestState
+from repro.serving.request import BatchPlan, Phase, RequestState
 from repro.serving.scheduler import SchedulerPolicy, make_policy
 
 
@@ -48,6 +54,13 @@ class ServeResult:
     arrival_s: float
     dispatch_s: float
     finish_s: float
+    #: simulated time the request's FIRST beam phase ran (prefill complete,
+    #: first scored continuations exist).  Chunked serving measures it at
+    #: the step that ran the final prefill chunk; monolithic batches only
+    #: materialize results when the whole fused program returns, so there it
+    #: equals ``finish_s`` — which is exactly the head-of-line cost the
+    #: chunked policy removes.
+    first_beam_s: float = 0.0
     #: per-phase timing: ``queue_s`` (arrival -> batch start) plus the
     #: batch's engine breakdown (device_s / host_mask_s / critical_s /
     #: compile_s / dispatches) and shape (batch_size, bucket_len).
@@ -60,6 +73,11 @@ class ServeResult:
     @property
     def queue_s(self) -> float:
         return self.dispatch_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first beam phase (paper §9: staged prefill's win)."""
+        return self.first_beam_s - self.arrival_s
 
 
 class RequestHandle:
@@ -114,6 +132,18 @@ class ServingSystem:
         self._rids: set = set()
         self._results: Dict[int, ServeResult] = {}
         self.completed: List[RequestState] = []
+        # continuous (chunked) policies plan engine *steps* instead of
+        # whole-request batches; the step pipeline is ONE sequential stream
+        # (num_streams applies to whole-batch dispatch only — see DESIGN §6)
+        self._continuous = hasattr(self.policy, "plan_step")
+        self._busy_until = 0.0
+        if self._continuous:
+            gr = getattr(engine, "gr", None)
+            if gr is not None:
+                self.policy.decode_cost = gr.beam_width
+                self.policy.num_decode_phases = gr.num_decode_phases
+            if hasattr(engine, "min_bucket"):
+                engine.min_bucket = min_bucket      # chunked cache sizing
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -162,6 +192,10 @@ class ServingSystem:
         that becomes due on the way.  Returns results newly completed."""
         if now_s is None:
             now_s = self._now
+        if self._continuous:
+            newly = self._run_steps(until=now_s)
+            self._now = max(self._now, now_s)
+            return newly
         newly: List[ServeResult] = []
         while True:
             deadline = self.policy.next_deadline()
@@ -187,6 +221,10 @@ class ServingSystem:
         """Flush every queued request, honoring quota deadlines in the tail:
         each leftover batch dispatches at its quota deadline (not early, not
         sitting past it)."""
+        if self._continuous:
+            newly = self._run_steps(until=None)     # run to completion
+            self._now = max(self._now, self._busy_until)
+            return newly
         newly: List[ServeResult] = []
         while len(self.policy):
             deadline = self.policy.next_deadline()
@@ -196,6 +234,49 @@ class ServingSystem:
                 break
             self._now = t
             newly.extend(self._dispatch(plan, t))
+        return newly
+
+    # ----------------------------------------------- continuous step loop
+    def _run_steps(self, until: Optional[float]) -> List[ServeResult]:
+        """Run chunked engine steps back-to-back while work exists.
+
+        Steps start at ``max(clock, engine busy-until)``; ``until=None``
+        drains every admitted and queued request, otherwise only steps that
+        *start* before ``until`` run (the rest wait for the next clock
+        advance, exactly like a real engine loop paused at a snapshot)."""
+        newly: List[ServeResult] = []
+        while True:
+            t = max(self._now, self._busy_until)
+            if until is not None and t >= until:
+                break
+            self.policy.admit(t)
+            plan = self.policy.plan_step(t)
+            if plan is None:
+                break
+            timing = self.engine.run_step(plan)     # real measured compute
+            end = t + timing["critical_s"]
+            self._busy_until = end
+            self.policy.commit(plan)
+            for e in plan.entries:
+                r = e.req
+                if r.dispatch_s is None:
+                    r.dispatch_s = t                # first time on-engine
+                if e.kind == "prefill" and e.last_chunk:
+                    r.first_beam_s = end            # TTFT point
+                if r.phase is Phase.DONE and r.rid not in self._results:
+                    r.finish_s = end
+                    res = ServeResult(
+                        rid=r.rid, items=r.items, log_probs=r.log_probs,
+                        arrival_s=r.arrival_s, dispatch_s=r.dispatch_s,
+                        finish_s=end,
+                        first_beam_s=(r.first_beam_s if r.first_beam_s
+                                      is not None else end),
+                        timing={"queue_s": r.dispatch_s - r.arrival_s,
+                                "step_tokens": float(plan.token_cost),
+                                **timing})
+                    self._results[r.rid] = res
+                    self.completed.append(r)
+                    newly.append(res)
         return newly
 
     # ------------------------------------------------------------- internal
@@ -209,9 +290,13 @@ class ServingSystem:
         for r in plan.requests:
             r.dispatch_s = start
             r.finish_s = start + dur
+            # monolithic batches materialize everything at once: the first
+            # beam phase is only observable when the program returns
+            r.first_beam_s = r.finish_s
             res = ServeResult(
                 rid=r.rid, items=r.items, log_probs=r.log_probs,
                 arrival_s=r.arrival_s, dispatch_s=start, finish_s=r.finish_s,
+                first_beam_s=r.finish_s,
                 timing={"queue_s": start - r.arrival_s,
                         "batch_size": float(plan.size),
                         "bucket_len": float(plan.bucket_len), **timing})

@@ -24,27 +24,40 @@ no caller branches on ``graph_dispatch``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import EngineSpec, GRConfig, ModelConfig, ServeConfig
 from repro.core.gr_decode import ExecutionBackend, GRDecoder, make_backend
 from repro.core.item_trie import ItemTrie
-from repro.serving.request import BatchPlan
+from repro.core.kv_cache import init_separated_cache
+from repro.serving.request import BatchPlan, StepPlan
+from repro.serving.scheduler import bucket_len
 
 
 @dataclasses.dataclass
 class EngineStats:
     dispatches: int = 0
-    batches: int = 0
+    batches: int = 0                # whole-request batches OR chunked steps
     requests: int = 0
     padded_tokens: int = 0          # sum of size × bucket over batches
     prompt_tokens: int = 0          # sum of real prompt lengths
     device_s: float = 0.0
     host_mask_s: float = 0.0
     compile_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _ChunkRuntime:
+    """Per-request device state for continuous (chunked) serving."""
+
+    cache: object                   # SeparatedCache, R == 1
+    state: object = None            # xbeam.BeamState after beam phase 0
+    parent: object = None           # (1, BW) fork indices
 
 
 class GREngine:
@@ -72,6 +85,14 @@ class GREngine:
             host_overlap=self.spec.host_overlap,
             capacity_hint=serve_cfg.max_batch_requests)
         self.stats = EngineStats()
+        # --- continuous (chunked) serving state ---------------------------
+        self.min_bucket = 64
+        self._runtimes: Dict[int, _ChunkRuntime] = {}
+        self._warm: set = set()
+        self._jit_chunk = jax.jit(self.decoder.prefill_chunk)
+        self._jit_phase0 = jax.jit(self.decoder.beam_phase0)
+        self._jit_phase = jax.jit(self.decoder.beam_phase,
+                                  static_argnames=("d",))
 
     # ---------------------------------------------------------------- utils
     def _pad_batch(self, plan: BatchPlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -103,3 +124,90 @@ class GREngine:
         self.stats.host_mask_s += timing["host_mask_s"]
         self.stats.compile_s += timing["compile_s"]
         return timing
+
+    # ------------------------------------------- continuous (chunked) steps
+    def _timed_call(self, key: tuple, fn, *args, **kw):
+        """Run a jitted call; first use per shape key warms the compile so
+        steady-state step timing stays compile-free (same discipline as the
+        batch backends).  All step programs are functional, so the warmup
+        call is a safe re-execution."""
+        compile_s = 0.0
+        if key not in self._warm:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args, **kw))
+            compile_s = time.perf_counter() - t0
+            self._warm.add(key)
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        return out, time.perf_counter() - t0, compile_s
+
+    def _runtime(self, req) -> _ChunkRuntime:
+        rt = self._runtimes.get(req.rid)
+        if rt is None:
+            s_max = bucket_len(req.prompt_len, self.min_bucket)
+            rt = _ChunkRuntime(cache=init_separated_cache(
+                self.cfg, self.gr, 1, s_max))
+            self._runtimes[req.rid] = rt
+        return rt
+
+    def _finalize(self, req, rt: _ChunkRuntime):
+        req.items = np.asarray(rt.state.tokens[0])
+        req.log_probs = np.asarray(rt.state.log_probs[0])
+        self._runtimes.pop(req.rid, None)
+        self.stats.requests += 1
+
+    def run_step(self, plan: StepPlan) -> Dict[str, float]:
+        """Execute one mixed prefill/decode step (numerics only — phase
+        bookkeeping is the scheduler's ``commit``).  Per-request device
+        state lives in ``_runtimes``; entries execute sequentially, so the
+        step's critical path is the sum of its sub-dispatches."""
+        nd = self.gr.num_decode_phases
+        device_s = compile_s = 0.0
+        dispatches = 0
+        for e in plan.entries:
+            r = e.req
+            if e.kind == "prefill":
+                rt = self._runtime(r)
+                s_max = rt.cache.shared_k.shape[2]
+                cb = bucket_len(max(e.chunk_len, 1), min_bucket=16)
+                toks = np.zeros((1, cb), np.int32)
+                toks[0, :e.chunk_len] = \
+                    r.tokens[e.offset:e.offset + e.chunk_len]
+                (logits, rt.cache), dt, cs = self._timed_call(
+                    ("chunk", cb, s_max), self._jit_chunk, self.params,
+                    jnp.asarray(toks), jnp.asarray([e.offset], jnp.int32),
+                    jnp.asarray([e.chunk_len], jnp.int32), rt.cache)
+                device_s += dt
+                compile_s += cs
+                dispatches += 1
+                self.stats.prompt_tokens += e.chunk_len
+                self.stats.padded_tokens += cb
+                if e.last_chunk:
+                    (rt.state, rt.parent), dt, cs = self._timed_call(
+                        ("phase0",), self._jit_phase0, logits)
+                    device_s += dt
+                    compile_s += cs
+                    dispatches += 1
+                    if nd <= 1:
+                        self._finalize(r, rt)
+            else:
+                rt = self._runtimes[r.rid]
+                d = e.decode_phase
+                (rt.state, rt.parent, rt.cache), dt, cs = self._timed_call(
+                    ("phase", d, rt.cache.shared_k.shape[2]),
+                    self._jit_phase, self.params, rt.state, rt.parent,
+                    rt.cache, d=d)
+                device_s += dt
+                compile_s += cs
+                dispatches += 1
+                self.stats.padded_tokens += self.gr.beam_width
+                if d == nd - 1:
+                    self._finalize(r, rt)
+        self.stats.batches += 1
+        self.stats.dispatches += dispatches
+        self.stats.device_s += device_s
+        self.stats.compile_s += compile_s
+        return {"device_s": device_s, "host_mask_s": 0.0,
+                "critical_s": device_s, "compile_s": compile_s,
+                "dispatches": dispatches}

@@ -36,3 +36,20 @@ def latency_summary(latencies_s: Sequence[float],
         "p99_ms": percentile(arr, 99) * 1e3 if n else float("nan"),
         "max_ms": float(arr.max() * 1e3) if n else float("nan"),
     }
+
+
+def ttft_summary(ttfts_s: Sequence[float]) -> Dict[str, float]:
+    """Time-to-first-beam-phase distribution (paper §9 staged prefill win).
+
+    Under monolithic batching TTFT equals full latency (results only exist
+    when the fused program returns); chunked staged prefill surfaces the
+    first beam phase as soon as the last prompt chunk lands, which is what
+    this summary makes comparable across policies."""
+    arr = np.asarray(ttfts_s, np.float64)
+    n = len(arr)
+    return {
+        "ttft_avg_ms": float(arr.mean() * 1e3) if n else float("nan"),
+        "ttft_p50_ms": percentile(arr, 50) * 1e3 if n else float("nan"),
+        "ttft_p99_ms": percentile(arr, 99) * 1e3 if n else float("nan"),
+        "ttft_max_ms": float(arr.max() * 1e3) if n else float("nan"),
+    }

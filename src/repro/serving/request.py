@@ -1,11 +1,32 @@
-"""Request lifecycle tracking for the serving simulator."""
+"""Request lifecycle tracking for the serving simulator.
+
+Two granularities coexist:
+
+  * **whole-request batches** (:class:`BatchPlan`) — the monolithic
+    policies cut a batch of requests; the engine runs prefill + all decode
+    phases for the whole batch in one go;
+  * **phase-tracked steps** (:class:`StepPlan`) — the "chunked" continuous
+    policy packs one engine *step* with decode phases of in-flight requests
+    plus prefill chunks of arriving ones; each request walks
+    ``QUEUED -> PREFILLING(next_offset) -> DECODING(decode_phase) -> DONE``.
+"""
 
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import List, Optional
 
 import numpy as np
+
+
+class Phase(enum.Enum):
+    """Continuous-batching request phase (chunked policy only)."""
+
+    QUEUED = "queued"           # waiting for admission
+    PREFILLING = "prefilling"   # shared cache filled up to ``next_offset``
+    DECODING = "decoding"       # beam phases ``1..ND-1`` remain
+    DONE = "done"
 
 
 @dataclasses.dataclass
@@ -19,10 +40,19 @@ class RequestState:
     finish_s: Optional[float] = None
     items: Optional[np.ndarray] = None      # (BW, ND) results
     log_probs: Optional[np.ndarray] = None
+    # --- continuous (chunked) batching ------------------------------------
+    phase: Phase = Phase.QUEUED
+    next_offset: int = 0            # prompt tokens already prefilled
+    decode_phase: int = 0           # next beam phase to run (1..ND-1)
+    first_beam_s: Optional[float] = None    # TTFT point: first beam phase ran
 
     @property
     def prompt_len(self) -> int:
         return int(self.tokens.shape[0])
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.next_offset
 
     @property
     def latency_s(self) -> float:
@@ -49,3 +79,42 @@ class BatchPlan:
     @property
     def padded_tokens(self) -> int:
         return self.size * self.bucket_len
+
+
+@dataclasses.dataclass
+class StepEntry:
+    """One request's share of a mixed engine step.
+
+    ``kind == "prefill"``: run prompt tokens ``[offset, offset+chunk_len)``
+    through :meth:`GRDecoder.prefill_chunk`; ``last_chunk`` marks the chunk
+    that completes the prompt (its final-position logits feed beam phase 0).
+    ``kind == "decode"``: run beam phase ``decode_phase`` (1..ND-1)."""
+
+    req: RequestState
+    kind: str                       # "prefill" | "decode"
+    offset: int = 0
+    chunk_len: int = 0
+    last_chunk: bool = False
+    decode_phase: int = 0
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One continuous-batching engine step: decode phases + prefill chunks.
+
+    Never exceeds ``ServeConfig.prefill_chunk_tokens`` total tokens (the
+    scheduler invariant tests lock this down)."""
+
+    entries: List[StepEntry]
+    formed_s: float
+    token_cost: int                 # decode queries + chunk tokens packed
+
+    @property
+    def size(self) -> int:
+        return len(self.entries)
+
+    def prefills(self) -> List[StepEntry]:
+        return [e for e in self.entries if e.kind == "prefill"]
+
+    def decodes(self) -> List[StepEntry]:
+        return [e for e in self.entries if e.kind == "decode"]

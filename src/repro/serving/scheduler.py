@@ -14,7 +14,15 @@ batching quota — and differ in batch *composition*:
   * ``bucket-affinity``  — groups prompts that pad to the same power-of-two
                            bucket, cutting padded-token waste (a batch's cost
                            is size × max bucket, so mixing a 64-bucket prompt
-                           into a 1024-bucket batch pays 16× its tokens).
+                           into a 1024-bucket batch pays 16× its tokens);
+  * ``chunked``          — continuous mixed prefill/decode batching (paper
+                           §5 staged prefill): instead of whole-request
+                           batches it emits per-step :class:`StepPlan`\\ s
+                           that pack decode phases of in-flight requests
+                           first and prefill *chunks* of arriving prompts in
+                           the remaining ``ServeConfig.prefill_chunk_tokens``
+                           budget, so a long prompt never head-of-line
+                           blocks running decodes.
 
 Prompt lengths are padded to power-of-two buckets so the engine compiles a
 bounded set of shapes (GR request sizes are power-law distributed; see
@@ -29,7 +37,8 @@ from typing import Callable, Deque, Dict, List, Optional, Protocol, \
     runtime_checkable
 
 from repro.config import ServeConfig
-from repro.serving.request import BatchPlan, RequestState
+from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
+                                   StepPlan)
 
 
 def bucket_len(n: int, min_bucket: int = 64) -> int:
@@ -247,3 +256,145 @@ class BucketAffinityBatcher:
 
     def __len__(self):
         return sum(len(q) for q in self.buckets.values())
+
+
+@register_policy("chunked")
+class ChunkedPrefillScheduler:
+    """Continuous mixed prefill/decode batching (paper §5 staged prefill).
+
+    Unlike the whole-request batchers this policy plans *engine steps*: each
+    :class:`StepPlan` packs at most ``cfg.prefill_chunk_tokens`` tokens —
+    decode phases of DECODING requests first (``decode_cost`` budget tokens
+    each, one per request per step, FIFO by admission), then prefill chunks
+    of PREFILLING requests in the remaining budget (FIFO by admission).  A
+    slice of the budget (``PREFILL_RESERVE`` = 1/4, at least one token) is
+    withheld from decode packing whenever a request is still prefilling, so
+    the oldest prefilling request receives a chunk on EVERY step — prefill
+    can never be starved by decode traffic, and decode steps are never
+    delayed by a long prompt (the head-of-line blocking xGR's staged
+    computation removes).  When the budget is too small to share — a single
+    decode step (``decode_cost``) does not fit next to the reserve — steps
+    ALTERNATE between decode-only and prefill-only packing, so both phases
+    still progress with at most one step of added delay.
+
+    The serving loop drives it through ``admit``/``plan_step``/``commit``
+    instead of ``maybe_dispatch``; the latter always returns None (there are
+    no whole-request batches to cut).  ``decode_cost`` (beam width) and
+    ``num_decode_phases`` are injected by :class:`ServingSystem` from the
+    engine's ``GRConfig``.
+    """
+
+    PREFILL_RESERVE = 4             # reserve budget/4 for prefill chunks
+
+    def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
+        self.cfg = cfg
+        self.min_bucket = min_bucket
+        self.waiting: Deque[RequestState] = deque()
+        self.active: List[RequestState] = []    # admission (FIFO) order
+        self.decode_cost = 1                    # tokens per decode entry
+        self.num_decode_phases = 3              # ND (beam phases per request)
+        self._decode_turn = False               # degenerate-budget fairness
+
+    # ---------------------------------------------------- policy protocol
+    def add(self, req: RequestState, now_s: float):
+        req.enqueue_s = now_s
+        req.phase = Phase.QUEUED
+        self.waiting.append(req)
+
+    def maybe_dispatch(self, now_s: float, force: bool = False
+                       ) -> Optional[BatchPlan]:
+        return None                 # continuous: steps, not request batches
+
+    def next_deadline(self) -> Optional[float]:
+        """Work is due the moment it exists — steps run back-to-back."""
+        if self.waiting:
+            return self.waiting[0].enqueue_s
+        return None
+
+    def __len__(self):
+        return len(self.waiting)
+
+    # ------------------------------------------------------ step planning
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def admit(self, now_s: float):
+        """Move arrivals into the active set up to ``max_batch_requests``."""
+        while self.waiting and len(self.active) < self.cfg.max_batch_requests:
+            req = self.waiting.popleft()
+            req.phase = Phase.PREFILLING
+            req.next_offset = 0
+            self.active.append(req)
+
+    def plan_step(self, now_s: float) -> Optional[StepPlan]:
+        """Pack one engine step; None when nothing is active."""
+        if not self.active:
+            return None
+        budget = max(1, self.cfg.prefill_chunk_tokens)
+        prefilling = [r for r in self.active if r.phase is Phase.PREFILLING]
+        decoding = [r for r in self.active if r.phase is Phase.DECODING]
+        reserve = (max(1, budget // self.PREFILL_RESERVE)
+                   if prefilling else 0)
+        entries: List[StepEntry] = []
+        used = 0
+        # degenerate budget: one decode step and the prefill reserve cannot
+        # share it — alternate whole steps so neither phase starves
+        degenerate = (decoding and prefilling
+                      and self.decode_cost > budget - reserve)
+        if degenerate and self._decode_turn:
+            self._decode_turn = False
+            for r in decoding:          # decode-only step (liveness floor:
+                if entries and used + self.decode_cost > budget:
+                    break               # the first entry always packs)
+                entries.append(StepEntry(req=r, kind="decode",
+                                         decode_phase=r.decode_phase))
+                used += self.decode_cost
+            return StepPlan(entries=entries, formed_s=now_s, token_cost=used)
+        if degenerate:
+            self._decode_turn = True    # this step prefills; next decodes
+        else:
+            for r in decoding:          # decode first: no HOL from prefill
+                if used + self.decode_cost > budget - reserve:
+                    break
+                entries.append(StepEntry(req=r, kind="decode",
+                                         decode_phase=r.decode_phase))
+                used += self.decode_cost
+        for r in prefilling:            # chunks fill the remainder
+            room = budget - used
+            if room <= 0:
+                break
+            clen = min(room, r.prefill_remaining)
+            entries.append(StepEntry(
+                req=r, kind="prefill", offset=r.next_offset, chunk_len=clen,
+                last_chunk=r.next_offset + clen == r.prompt_len))
+            used += clen
+        if not entries:
+            # liveness floor: a decode_cost larger than the whole budget
+            # must still make progress — schedule the oldest decode alone
+            r = decoding[0]
+            entries = [StepEntry(req=r, kind="decode",
+                                 decode_phase=r.decode_phase)]
+            used = self.decode_cost
+        return StepPlan(entries=entries, formed_s=now_s, token_cost=used)
+
+    def commit(self, plan: StepPlan):
+        """Apply a planned step's phase transitions (host bookkeeping only —
+        the engine runs the numerics; tests drive the policy without it)."""
+        nd = self.num_decode_phases
+        for e in plan.entries:
+            r = e.req
+            if e.kind == "prefill":
+                r.next_offset += e.chunk_len
+                if e.last_chunk:
+                    # beam phase 0 consumes the final chunk's logits in the
+                    # same step; remaining work is phases 1..ND-1
+                    if nd <= 1:
+                        r.phase = Phase.DONE
+                    else:
+                        r.phase = Phase.DECODING
+                        r.decode_phase = 1
+            else:
+                r.decode_phase += 1
+                if r.decode_phase >= nd:
+                    r.phase = Phase.DONE
+        self.active = [r for r in self.active if r.phase is not Phase.DONE]

@@ -28,7 +28,8 @@ from typing import Dict, List
 from repro.config import ServeConfig
 from repro.serving.api import ServingSystem
 from repro.serving.engine import GREngine
-from repro.serving.metrics import engine_summary, latency_summary
+from repro.serving.metrics import engine_summary, latency_summary, \
+    ttft_summary
 from repro.serving.request import RequestState
 
 
@@ -38,6 +39,9 @@ class ServerReport:
     requests: List[RequestState]
     engine_stats: Dict[str, float]
     slo_ms: float
+    #: time-to-first-beam-phase distribution; equals the latency
+    #: distribution under monolithic policies (see metrics.ttft_summary)
+    ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def slo_violations(self) -> int:
@@ -55,9 +59,12 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
     done = system.completed
     duration = max((r.finish_s for r in done), default=0.0)
     lat = [r.latency_s for r in done]
+    ttft = [(r.first_beam_s if r.first_beam_s is not None else r.finish_s)
+            - r.arrival_s for r in done]
     return ServerReport(
         summary=latency_summary(lat, duration),
         requests=done,
         engine_stats=engine_summary(engine.stats),
         slo_ms=serve_cfg.slo_ms,
+        ttft=ttft_summary(ttft),
     )

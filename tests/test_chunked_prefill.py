@@ -1,0 +1,224 @@
+"""Chunked staged prefill == monolithic prefill (ISSUE 3 tentpole lockdown).
+
+Property suite: for random prompt lengths and random per-request chunk
+splits, staged prefill through ``GRDecoder.prefill_chunk`` /
+``write_prefill_chunk`` must be indistinguishable from the monolithic
+``prefill`` — same final-position logits, same shared-cache contents at
+every valid position, and identical beam tokens when generation runs over
+the chunked cache.
+
+The core checks are plain seeded functions so they ALWAYS run; when
+hypothesis is available (requirements-dev.txt, importorskip'd like
+test_property.py) the same checks additionally run under ``@given`` with
+hypothesis-drawn lengths and seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.config import GRConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.core.gr_decode import GRDecoder
+from repro.core.kv_cache import (chunk_slots, init_separated_cache,
+                                 write_prefill, write_prefill_chunk)
+from repro.data import gen_catalog
+
+SETTINGS = dict(max_examples=10, deadline=None)
+S_MAX = 48          # fixed padded prompt buffer for every example
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    dec = GRDecoder(cfg, gr, trie)
+    params = dec.model.init(jax.random.PRNGKey(0))
+    return cfg, gr, dec, params
+
+
+def _random_split(rng, total):
+    """Random ordered partition of ``total`` into >= 1 chunks."""
+    cuts = [0, total]
+    for _ in range(int(rng.integers(0, 4))):
+        cuts.append(int(rng.integers(1, total)))
+    cuts = sorted(set(cuts))
+    return [b - a for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+def _chunked_prefill(dec, params, cfg, gr, toks, lengths, splits):
+    """Drive prefill_chunk round by round with per-request chunk splits."""
+    R = toks.shape[0]
+    cache = init_separated_cache(cfg, gr, R, S_MAX)
+    offsets = np.zeros(R, np.int32)
+    final_logits = np.zeros((R, cfg.vocab_size), np.float32)
+    rounds = max(len(s) for s in splits)
+    for j in range(rounds):
+        cl = np.array([s[j] if j < len(s) else 0 for s in splits], np.int32)
+        C = max(int(cl.max()), 1)
+        chunk = np.zeros((R, C), np.int32)
+        for r in range(R):
+            chunk[r, :cl[r]] = toks[r, offsets[r]:offsets[r] + cl[r]]
+        logits, cache = dec.prefill_chunk(
+            params, jnp.asarray(chunk), jnp.asarray(offsets),
+            jnp.asarray(cl), cache)
+        offsets += cl
+        for r in range(R):
+            if cl[r] and offsets[r] == lengths[r]:
+                final_logits[r] = np.asarray(logits[r])
+    assert (offsets == lengths).all()
+    return jnp.asarray(final_logits), cache
+
+
+def check_prefill_equivalence(world, lens, seed):
+    """Chunked vs monolithic: logits, cache contents, and beam tokens."""
+    cfg, gr, dec, params = world
+    rng = np.random.default_rng(seed)
+    R = len(lens)
+    lengths = np.asarray(lens, np.int32)
+    toks = np.zeros((R, S_MAX), np.int32)
+    for r, L in enumerate(lengths):
+        toks[r, :L] = rng.integers(0, cfg.vocab_size, L)
+    splits = [_random_split(rng, int(L)) for L in lengths]
+
+    logits_m, cache_m = dec.prefill(params, jnp.asarray(toks),
+                                    jnp.asarray(lengths))
+    logits_c, cache_c = _chunked_prefill(dec, params, cfg, gr, toks,
+                                         lengths, splits)
+
+    # final-position logits agree (f32)
+    np.testing.assert_allclose(np.asarray(logits_c), np.asarray(logits_m),
+                               atol=2e-4, rtol=1e-4)
+    # shared cache identical at every VALID position (monolithic also
+    # computes KV for right-padding garbage tokens; both sides mask it)
+    np.testing.assert_array_equal(np.asarray(cache_c.shared_len),
+                                  np.asarray(cache_m.shared_len))
+    km, kc = np.asarray(cache_m.shared_k), np.asarray(cache_c.shared_k)
+    vm, vc = np.asarray(cache_m.shared_v), np.asarray(cache_c.shared_v)
+    for r, L in enumerate(lengths):
+        np.testing.assert_allclose(kc[:, r, :L], km[:, r, :L], atol=1e-5)
+        np.testing.assert_allclose(vc[:, r, :L], vm[:, r, :L], atol=1e-5)
+
+    # generation over the chunked cache yields identical beam tokens
+    out_m = dec.decode_from_prefill(params, logits_m, cache_m)
+    out_c = dec.decode_from_prefill(params, logits_c, cache_c)
+    np.testing.assert_array_equal(np.asarray(out_c["items"]),
+                                  np.asarray(out_m["items"]))
+    np.testing.assert_allclose(np.asarray(out_c["log_probs"]),
+                               np.asarray(out_m["log_probs"]), atol=1e-4)
+
+
+def check_write_chunk_equivalence(world, seed):
+    """Cache-level API: incremental chunk writes == one whole-prompt write."""
+    cfg, gr, dec, params = world
+    rng = np.random.default_rng(seed)
+    R = 2
+    lengths = rng.integers(4, S_MAX + 1, R).astype(np.int32)
+    toks = np.zeros((R, S_MAX), np.int32)
+    for r, L in enumerate(lengths):
+        toks[r, :L] = rng.integers(0, cfg.vocab_size, L)
+    # collect the monolithic per-layer KV once
+    cache0 = dec.model.init_cache(R, S_MAX, jnp.float32)
+    _, filled = dec.model.prefill(
+        params, {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray(lengths)}, cache0)
+    ks, vs = filled["dense"]["k"], filled["dense"]["v"]
+
+    whole = write_prefill(init_separated_cache(cfg, gr, R, S_MAX), ks, vs,
+                          jnp.asarray(lengths))
+    inc = init_separated_cache(cfg, gr, R, S_MAX)
+    splits = [_random_split(rng, int(L)) for L in lengths]
+    offsets = np.zeros(R, np.int32)
+    for j in range(max(len(s) for s in splits)):
+        cl = np.array([s[j] if j < len(s) else 0 for s in splits], np.int32)
+        C = max(int(cl.max()), 1)
+        kchunk = np.zeros((ks.shape[0], R, C) + ks.shape[3:], np.float32)
+        vchunk = np.zeros_like(kchunk)
+        for r in range(R):
+            kchunk[:, r, :cl[r]] = np.asarray(
+                ks[:, r, offsets[r]:offsets[r] + cl[r]])
+            vchunk[:, r, :cl[r]] = np.asarray(
+                vs[:, r, offsets[r]:offsets[r] + cl[r]])
+        inc = write_prefill_chunk(inc, jnp.asarray(kchunk),
+                                  jnp.asarray(vchunk), jnp.asarray(offsets),
+                                  jnp.asarray(cl))
+        offsets += cl
+    np.testing.assert_array_equal(np.asarray(inc.shared_len),
+                                  np.asarray(whole.shared_len))
+    kw, ki = np.asarray(whole.shared_k), np.asarray(inc.shared_k)
+    vw, vi = np.asarray(whole.shared_v), np.asarray(inc.shared_v)
+    for r, L in enumerate(lengths):
+        np.testing.assert_array_equal(ki[:, r, :L], kw[:, r, :L])
+        np.testing.assert_array_equal(vi[:, r, :L], vw[:, r, :L])
+
+
+# ---------------------------------------------------------------------------
+# Always-on seeded instances of the properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lens,seed", [
+    ([S_MAX, 19], 0),           # one full-buffer, one short
+    ([5, 31, 44], 1),           # three lengths, many split shapes
+    ([12, 12], 2),              # equal lengths, different splits
+])
+def test_chunked_prefill_matches_monolithic(world, lens, seed):
+    check_prefill_equivalence(world, lens, seed)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_write_prefill_chunk_matches_write_prefill(world, seed):
+    check_write_chunk_equivalence(world, seed)
+
+
+def test_chunked_cache_feeds_generate_identically(world):
+    """End-to-end: generate() vs chunked prefill + decode_from_prefill."""
+    cfg, gr, dec, params = world
+    rng = np.random.default_rng(7)
+    lengths = np.array([S_MAX, 19], np.int32)
+    toks = np.zeros((2, S_MAX), np.int32)
+    for r, L in enumerate(lengths):
+        toks[r, :L] = rng.integers(0, cfg.vocab_size, L)
+    ref = dec.generate(params, jnp.asarray(toks), jnp.asarray(lengths),
+                       mode="eager")
+    splits = [[20, 12, 16], [5, 5, 9]]
+    logits_c, cache_c = _chunked_prefill(dec, params, cfg, gr, toks,
+                                         lengths, splits)
+    out = dec.decode_from_prefill(params, logits_c, cache_c)
+    np.testing.assert_array_equal(np.asarray(out["items"]),
+                                  np.asarray(ref["items"]))
+    np.testing.assert_allclose(np.asarray(out["log_probs"]),
+                               np.asarray(ref["log_probs"]), atol=1e-4)
+
+
+def test_chunk_slots_drops_padding():
+    slots = chunk_slots(jnp.asarray([3, 0]), jnp.asarray([2, 0]), 4, 16)
+    np.testing.assert_array_equal(
+        np.asarray(slots), [[3, 4, 16, 16], [16, 16, 16, 16]])
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-drawn instances (skipped when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(**SETTINGS)
+    @given(st.lists(st.integers(4, S_MAX), min_size=2, max_size=3),
+           st.integers(0, 2**31 - 1))
+    def test_chunked_prefill_property(world, lens, seed):
+        check_prefill_equivalence(world, lens, seed)
+
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1))
+    def test_write_prefill_chunk_property(world, seed):
+        check_write_chunk_equivalence(world, seed)

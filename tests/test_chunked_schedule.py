@@ -1,0 +1,288 @@
+"""Invariants of the "chunked" mixed prefill/decode policy (ISSUE 3).
+
+Pure-policy tests drive ``admit``/``plan_step``/``commit`` directly (no
+engine); the integration tests run the continuous loop through
+``ServingSystem`` with a stub engine that only does bookkeeping.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.serving import (ChunkedPrefillScheduler, EngineStats, Phase,
+                           RequestState, ServingSystem, make_policy)
+
+
+def _req(rid, n, arrival=0.0):
+    return RequestState(rid, np.zeros(n, np.int32), arrival)
+
+
+def _policy(budget=64, max_requests=8, decode_cost=8, nd=3):
+    pol = ChunkedPrefillScheduler(
+        ServeConfig(prefill_chunk_tokens=budget,
+                    max_batch_requests=max_requests))
+    pol.decode_cost = decode_cost
+    pol.num_decode_phases = nd
+    return pol
+
+
+def _drive(pol, max_steps=500):
+    """Run plan/commit to completion, returning every cut StepPlan."""
+    plans = []
+    for _ in range(max_steps):
+        pol.admit(0.0)
+        plan = pol.plan_step(0.0)
+        if plan is None:
+            break
+        plans.append(plan)
+        pol.commit(plan)
+    assert pol.plan_step(0.0) is None, "did not converge"
+    return plans
+
+
+def test_registered():
+    pol = make_policy("chunked", ServeConfig())
+    assert isinstance(pol, ChunkedPrefillScheduler)
+
+
+# ---------------------------------------------------------------------------
+# Budget invariant
+# ---------------------------------------------------------------------------
+
+def test_step_never_exceeds_token_budget():
+    pol = _policy(budget=64, decode_cost=8)
+    for i in range(10):
+        pol.add(_req(i, 100 + 30 * i), 0.0)
+    for plan in _drive(pol):
+        cost = sum(e.chunk_len if e.kind == "prefill" else pol.decode_cost
+                   for e in plan.entries)
+        assert cost == plan.token_cost
+        assert cost <= 64
+
+
+def test_decode_cost_larger_than_budget_still_progresses():
+    pol = _policy(budget=4, decode_cost=16)
+    pol.add(_req(0, 10), 0.0)
+    plans = _drive(pol)
+    assert plans, "no steps ran"
+    assert all(r.phase is Phase.DONE for r in [plans[0].entries[0].req])
+
+
+def test_degenerate_budget_alternates_decode_and_prefill():
+    """decode_cost > budget - reserve with both phases active: steps must
+    alternate so decoding requests are not starved by a prefill stream."""
+    pol = _policy(budget=16, decode_cost=16, nd=3)
+    deco = _req(0, 8)
+    pol.add(deco, 0.0)
+    pol.admit(0.0)
+    pol.commit(pol.plan_step(0.0))      # prefill-only -> DECODING
+    assert deco.phase is Phase.DECODING
+    pre = _req(1, 400)                  # long prompt keeps PREFILLING alive
+    pol.add(pre, 0.0)
+    pol.admit(0.0)
+    steps = 0
+    while deco.phase is not Phase.DONE:
+        pol.commit(pol.plan_step(0.0))
+        steps += 1
+        assert steps < 10, "decoding request starved by prefill stream"
+    assert pre.phase is Phase.PREFILLING and pre.next_offset > 0
+
+
+# ---------------------------------------------------------------------------
+# No starvation: every step with a prefilling request includes a chunk
+# ---------------------------------------------------------------------------
+
+def test_prefill_never_starved_by_decode_traffic():
+    pol = _policy(budget=32, decode_cost=16, nd=50)  # decodes saturate
+    for i in range(4):
+        pol.add(_req(i, 8), 0.0)
+    pol.admit(0.0)
+    # walk the first four into DECODING
+    while any(r.phase is Phase.PREFILLING for r in pol.active):
+        plan = pol.plan_step(0.0)
+        pol.commit(plan)
+    pol.add(_req(99, 200), 0.0)         # long prompt arrives under load
+    pol.admit(0.0)
+    steps_to_first_chunk = 0
+    got = 0
+    while got < 200:
+        plan = pol.plan_step(0.0)
+        chunks = [e for e in plan.prefills() if e.req.rid == 99]
+        if got == 0 and not chunks:
+            steps_to_first_chunk += 1
+        for e in chunks:
+            got += e.chunk_len
+        # invariant: prefilling active => the plan contains a prefill chunk
+        assert plan.prefills(), "prefilling request starved"
+        pol.commit(plan)
+    assert steps_to_first_chunk == 0    # chunk on the very first step
+
+
+# ---------------------------------------------------------------------------
+# FIFO order among same-phase requests
+# ---------------------------------------------------------------------------
+
+def test_fifo_order_within_phases():
+    pol = _policy(budget=32, decode_cost=8)
+    for i in range(6):
+        pol.add(_req(i, 40), 0.0)
+    for plan in _drive(pol):
+        for group in (plan.decodes(), plan.prefills()):
+            rids = [e.req.rid for e in group]
+            assert rids == sorted(rids)
+    # completion order is FIFO too (same lengths, same phases)
+
+
+def test_chunks_partition_prompt_in_order():
+    pol = _policy(budget=16)
+    pol.add(_req(0, 50), 0.0)
+    seen = []
+    for plan in _drive(pol):
+        for e in plan.prefills():
+            assert e.offset == sum(seen)        # contiguous, in order
+            seen.append(e.chunk_len)
+    assert sum(seen) == 50
+    assert max(seen) <= 16
+
+
+def test_admission_respects_max_batch_requests():
+    pol = _policy(budget=1024, max_requests=3)
+    for i in range(10):
+        pol.add(_req(i, 16), 0.0)
+    pol.admit(0.0)
+    assert len(pol.active) == 3
+    assert len(pol) == 7                        # still waiting
+    for plan in _drive(pol):
+        assert len({e.req.rid for e in plan.entries}) <= 3
+
+
+def test_phase_walk():
+    pol = _policy(budget=16, decode_cost=4, nd=3)
+    r = _req(0, 40)
+    pol.add(r, 0.0)
+    assert r.phase is Phase.QUEUED
+    pol.admit(0.0)
+    assert r.phase is Phase.PREFILLING
+    offs = []
+    while r.phase is Phase.PREFILLING:
+        plan = pol.plan_step(0.0)
+        offs.append(r.next_offset)
+        pol.commit(plan)
+    assert offs == sorted(offs)
+    assert r.phase is Phase.DECODING and r.decode_phase == 1
+    pol.commit(pol.plan_step(0.0))
+    assert r.decode_phase == 2
+    pol.commit(pol.plan_step(0.0))
+    assert r.phase is Phase.DONE
+    assert not pol.active
+
+
+# ---------------------------------------------------------------------------
+# Continuous loop through the ServingSystem facade (stub engine)
+# ---------------------------------------------------------------------------
+
+class StubChunkEngine:
+    """Bookkeeping-only engine for the continuous loop."""
+
+    def __init__(self, serve_cfg, dur_s=0.01):
+        self.serve_cfg = serve_cfg
+        self.spec = EngineSpec(backend="graph", num_streams=2)
+        self.gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3)
+        self.stats = EngineStats()
+        self.dur_s = dur_s
+        self.plans = []
+
+    def run_step(self, plan):
+        self.plans.append(plan)
+        nd = self.gr.num_decode_phases
+        for e in plan.entries:
+            done = (e.kind == "decode" and e.decode_phase == nd - 1) or \
+                   (e.kind == "prefill" and e.last_chunk and nd <= 1)
+            if done:
+                e.req.items = np.zeros((4, 3), np.int32)
+                e.req.log_probs = np.zeros(4, np.float32)
+        return {"device_s": self.dur_s, "host_mask_s": 0.0,
+                "critical_s": self.dur_s, "compile_s": 0.0,
+                "dispatches": len(plan.entries)}
+
+
+def _system(**cfg_kw):
+    kw = dict(max_batch_tokens=10**6, max_batch_requests=8,
+              scheduler_policy="chunked", prefill_chunk_tokens=64)
+    kw.update(cfg_kw)
+    scfg = ServeConfig(**kw)
+    eng = StubChunkEngine(scfg)
+    return ServingSystem(eng, scfg), eng
+
+
+def test_system_injects_gr_params_into_policy():
+    sys_, eng = _system()
+    assert sys_.policy.decode_cost == 4
+    assert sys_.policy.num_decode_phases == 3
+
+
+def test_continuous_lifecycle_and_ttft():
+    sys_, eng = _system()
+    short = sys_.submit(np.zeros(16, np.int32), arrival_s=0.0)
+    long = sys_.submit(np.zeros(200, np.int32), arrival_s=0.0)
+    assert not long.done()
+    sys_.drain()
+    assert long.done() and short.done()
+    for h in (long, short):
+        r = h.result()
+        assert r.ttft_s <= r.latency_s
+        assert r.first_beam_s <= r.finish_s
+    # the short prompt's prefill completes on step 1; its beam phases run
+    # WHILE the long prompt is still chunking — the anti-head-of-line
+    # property: at least one step mixes a decode with a prefill chunk
+    assert short.result().first_beam_s < long.result().first_beam_s
+    assert any(p.decodes() and p.prefills() for p in eng.plans)
+
+
+def test_steps_only_run_inside_clock_window():
+    sys_, eng = _system()
+    sys_.submit(np.zeros(16, np.int32), arrival_s=0.0)
+    assert not eng.plans                        # submit alone runs nothing
+    sys_.step(0.015)                            # two 10ms steps fit partly
+    ran = len(eng.plans)
+    assert ran >= 1
+    sys_.drain()
+    assert len(eng.plans) > ran
+
+
+def test_budget_respected_through_facade():
+    sys_, eng = _system(prefill_chunk_tokens=32)
+    for i in range(6):
+        sys_.submit(np.zeros(100, np.int32), arrival_s=0.0)
+    sys_.drain()
+    for plan in eng.plans:
+        assert plan.token_cost <= 32
+
+
+def test_run_server_reports_ttft_for_chunked():
+    import jax
+    from repro.configs import get_config
+    from repro.core import ItemTrie
+    from repro.data import gen_catalog, gen_histories, poisson_trace
+    from repro.models import get_model
+    from repro.serving import GREngine, run_server
+
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    hist = gen_histories(catalog, 6, max_tokens=64, seed=1)
+    trace = poisson_trace(hist, rps=100.0, duration_s=0.05, seed=2)
+    scfg = ServeConfig(max_batch_requests=4, scheduler_policy="chunked",
+                       prefill_chunk_tokens=48)
+    eng = GREngine(cfg, gr, params, trie, scfg,
+                   spec=EngineSpec(backend="graph", num_streams=2))
+    rep = run_server(eng, trace, scfg)
+    assert rep.summary["requests"] == len(trace)
+    assert rep.ttft["ttft_p99_ms"] <= rep.summary["p99_ms"] + 1e-6
+    valid = {tuple(r) for r in catalog.tolist()}
+    for r in rep.requests:
+        assert r.first_beam_s is not None
+        assert all(tuple(it) in valid for it in r.items)
