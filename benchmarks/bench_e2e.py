@@ -12,6 +12,11 @@ trace served under the monolithic ``token-capacity`` policy vs the
 and p99 latency — the head-of-line blocking a long prompt inflicts on
 short-prompt traffic is the cost chunked staged prefill removes.
 
+Plus the ISSUE-4 beam-select scenario: identical traffic served with
+``beam_select="dense"`` (full-vocab masks) vs ``"sparse"`` (trie-gather
+over padded-CSR child tables), with the candidate-pool / sort-work-saved
+stats from ``ServerReport.beam_pool``.
+
 Batch compute is real measured CPU wall time; queueing/streams are composed
 on the simulated clock (see serving/server.py for the rationale).  The
 shapes are scaled to CPU (reduced model, BW=16) — the paper's relative
@@ -59,6 +64,28 @@ def mixed_prefill(cfg, gr, catalog, trie, params):
             f";reqs={s['requests']}")
 
 
+def beam_select_modes(cfg, gr, catalog, trie, params):
+    """ISSUE 4: identical traffic served with dense-mask vs sparse
+    trie-gather beam expansion; derived column carries the candidate-pool
+    stats from the ServerReport."""
+    hist = gen_histories(catalog, 40, max_tokens=96, seed=6)
+    trace = poisson_trace(hist, rps=100.0, duration_s=0.3, seed=7)
+    for mode in ("dense", "sparse"):
+        scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
+                           batch_wait_quota_ms=5.0, num_streams=1,
+                           beam_select=mode)
+        eng = GREngine(cfg, gr, params, trie, scfg,
+                       spec=EngineSpec(backend="graph", num_streams=1,
+                                       beam_select=mode))
+        rep = run_server(eng, trace, scfg)
+        s, bp = rep.summary, rep.beam_pool
+        row(f"beam_select_{mode}", s["avg_ms"] * 1e3,
+            f"p99_ms={s['p99_ms']:.1f};avg_ms={s['avg_ms']:.1f}"
+            f";reqs={s['requests']}"
+            f";pool_mean={bp['mean_pool']:.0f};pool_max={bp['max_pool']}"
+            f";sort_saved={bp['saved_fraction']*100:.0f}%")
+
+
 def main():
     cfg = get_config("onerec-0.1b").reduced()
     gr = GRConfig(beam_width=16, top_k=16, num_decode_phases=3,
@@ -93,6 +120,7 @@ def main():
                 f";slo_viol={rep.slo_violations}"
                 f";disp_per_batch={rep.engine_stats['dispatches_per_batch']:.0f}")
     mixed_prefill(cfg, gr, catalog, trie, params)
+    beam_select_modes(cfg, gr, catalog, trie, params)
 
 
 if __name__ == "__main__":

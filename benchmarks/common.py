@@ -9,10 +9,28 @@ target (bytes, roofline milliseconds, ratios), labelled per row.
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
+
+#: standard bench-JSON directory (one record file per benchmark, so the
+#: perf trajectory across PRs is machine-diffable — same convention as
+#: scripts/perf_iter.py's experiments/perf/*.json)
+BENCH_JSON_DIR = "experiments/bench"
+
+
+def write_bench_json(name: str, record: dict,
+                     outdir: str = BENCH_JSON_DIR) -> str:
+    """Write a benchmark's structured record to the standard bench JSON
+    (``experiments/bench/<name>.json``); returns the path."""
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

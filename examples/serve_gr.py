@@ -6,10 +6,12 @@ CPU scale.
 Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
       [--policy token-capacity|edf|bucket-affinity|chunked]
       [--chunk-tokens 256]   (per-step budget of the chunked policy)
+      [--beam-select dense|sparse]   (trie-gather beam expansion, DESIGN §7)
       [--baseline]   (PagedAttention-style pipeline instead of xGR)
 """
 
 import argparse
+import dataclasses
 
 import jax
 
@@ -19,7 +21,8 @@ from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
 from repro.serving import (GREngine, ServingSystem, available_policies,
-                           engine_summary, latency_summary, ttft_summary)
+                           beam_pool_summary, engine_summary,
+                           latency_summary, ttft_summary)
 
 
 def main():
@@ -33,6 +36,10 @@ def main():
     ap.add_argument("--beam-width", type=int, default=16)
     ap.add_argument("--chunk-tokens", type=int, default=256,
                     help="per-step token budget (chunked policy)")
+    ap.add_argument("--beam-select", default="dense",
+                    choices=["dense", "sparse"],
+                    help="dense (R,BW,V)-mask vs sparse trie-gather "
+                         "beam expansion (selection-identical)")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -63,7 +70,9 @@ def main():
                        scheduler_policy=args.policy,
                        num_streams=spec.num_streams,
                        graph_dispatch=spec.backend == "graph",
-                       prefill_chunk_tokens=args.chunk_tokens)
+                       prefill_chunk_tokens=args.chunk_tokens,
+                       beam_select=args.beam_select)
+    spec = dataclasses.replace(spec, beam_select=args.beam_select)
     engine = GREngine(cfg, gr, params, trie, scfg, spec=spec)
 
     # --- the online request loop: submit -> step -> drain ------------------
@@ -91,6 +100,10 @@ def main():
           f"{es['dispatches_per_batch']:.1f} dispatches/batch, "
           f"device {es['device_s']:.2f}s, host-mask {es['host_mask_s']:.2f}s, "
           f"compile {es['compile_s']:.1f}s (excluded from latency)")
+    bp = beam_pool_summary(engine.stats)
+    print(f"  beam pool  : {args.beam_select}, mean {bp['mean_pool']:.0f} / "
+          f"max {bp['max_pool']} candidates per beam, "
+          f"sort work saved {bp['saved_fraction']*100:.0f}%")
     r0 = results[0]
     if "batch_size" in r0.timing:
         shape = (f"in a {int(r0.timing['batch_size'])}-request batch "

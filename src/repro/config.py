@@ -217,6 +217,12 @@ class GRConfig:
     tid_vocab: int = 8192            # per-level token-id vocabulary
     length_penalty: float = 0.0
     mask_neg: float = -1e9           # additive mask value for invalid tokens
+    #: beam-expansion algorithm (paper §6 early sorting termination):
+    #:   "dense"  — mask the full (R, BW, V) grid, two-stage Top-K over V
+    #:   "sparse" — gather logits at each beam's trie children (padded-CSR
+    #:              tables) and Top-K over the (R, BW, max_fanout) pool;
+    #:              selection-equivalent to "dense", requires an ItemTrie
+    beam_select: str = "dense"
 
 
 @dataclass(frozen=True)
@@ -250,6 +256,9 @@ class ServeConfig:
     #: each engine step packs decode steps first, then prefill chunks, and
     #: never exceeds this many tokens (paper §5 staged prefill)
     prefill_chunk_tokens: int = 256
+    #: beam-select override for the engine: "" keeps GRConfig.beam_select,
+    #: "dense"/"sparse" force that path (see GRConfig.beam_select)
+    beam_select: str = ""
 
 
 @dataclass(frozen=True)
@@ -267,12 +276,16 @@ class EngineSpec:
     attention_impl: str = "staged"   # "staged" | "paged" | "kernel"
     num_streams: int = 4
     host_overlap: bool = True
+    #: "" = inherit GRConfig.beam_select; "dense"/"sparse" override it
+    beam_select: str = ""
 
     def __post_init__(self):
         if self.backend not in ("graph", "eager"):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.attention_impl not in ("staged", "paged", "kernel"):
             raise ValueError(f"unknown attention_impl {self.attention_impl!r}")
+        if self.beam_select not in ("", "dense", "sparse"):
+            raise ValueError(f"unknown beam_select {self.beam_select!r}")
 
     @classmethod
     def from_serve_config(cls, serve_cfg: "ServeConfig",
@@ -281,7 +294,8 @@ class EngineSpec:
         return cls(backend="graph" if serve_cfg.graph_dispatch else "eager",
                    attention_impl=attention_impl,
                    num_streams=serve_cfg.num_streams,
-                   host_overlap=serve_cfg.num_streams > 1)
+                   host_overlap=serve_cfg.num_streams > 1,
+                   beam_select=serve_cfg.beam_select)
 
 
 # ---------------------------------------------------------------------------

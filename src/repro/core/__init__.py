@@ -14,7 +14,8 @@ from repro.core.xattention import (full_reference_attention,
                                    paged_beam_attention,
                                    staged_beam_attention)
 from repro.core.xbeam import (BeamState, beam_step, host_beam_select,
-                              init_beam_state, naive_beam_select)
+                              init_beam_state, naive_beam_select,
+                              sparse_beam_step)
 
 __all__ = [
     "GRDecoder", "ItemTrie", "MaskWorkspace", "SeparatedCache",
@@ -22,4 +23,5 @@ __all__ = [
     "two_pass_schedule", "write_prefill", "full_reference_attention",
     "paged_beam_attention", "staged_beam_attention", "BeamState",
     "beam_step", "host_beam_select", "init_beam_state", "naive_beam_select",
+    "sparse_beam_step",
 ]

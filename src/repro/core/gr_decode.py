@@ -4,8 +4,11 @@ This is the engine-facing integration of the paper's three components for
 dense-GQA GR models (OneRec-style):
 
   prefill         — prompt forward, KV installed once into the shared cache
-  beam phase d    — xBeam expansion with valid-path masks (dense at d=0,
-                    trie-derived at d>0)
+  beam phase d    — xBeam expansion with valid-path constraints: dense
+                    (R, BW, V) masks, or — with ``beam_select="sparse"`` —
+                    a gather over the trie's padded-CSR child tables with
+                    Top-K over the (R, BW, max_fanout) pool (paper §6
+                    early sorting termination; no dense mask materialized)
   decode phase d  — one token per beam; staged xAttention against the
                     separated cache; unshared cache forked by parent index
 
@@ -56,8 +59,29 @@ class GRDecoder:
         self.trie = trie
         assert attention_impl in ("staged", "paged", "kernel")
         self.attention_impl = attention_impl
+        if gr.beam_select not in ("dense", "sparse"):
+            raise ValueError(f"unknown beam_select {gr.beam_select!r}; "
+                             f"have ['dense', 'sparse']")
+        if gr.beam_select == "sparse":
+            if trie is None:
+                raise ValueError("beam_select='sparse' gathers trie "
+                                 "children; it requires an ItemTrie")
+            if trie.nd < gr.num_decode_phases:
+                raise ValueError(
+                    f"trie depth {trie.nd} does not cover "
+                    f"{gr.num_decode_phases} decode phases")
+        self._sparse = gr.beam_select == "sparse"
         self.model = TransformerModel(cfg)
         self._backends: Dict[str, "ExecutionBackend"] = {}
+
+    def candidate_pool_sizes(self) -> list:
+        """Per-phase candidate-pool width each beam's select scans: the trie
+        level's max fanout on the sparse path, the full vocab on the dense
+        one (feeds the engine's ``beam_pool`` early-termination stats)."""
+        nd = self.gr.num_decode_phases
+        if self._sparse:
+            return [int(self.trie.max_fanout[d]) for d in range(nd)]
+        return [self.cfg.vocab_size] * nd
 
     # ------------------------------------------------------------ prefill
     def prefill(self, params, tokens: jax.Array, lengths: jax.Array,
@@ -207,18 +231,30 @@ class GRDecoder:
         gr = self.gr
         R = logits0.shape[0]
         state = xbeam.init_beam_state(R, gr)
-        mask0 = (self.trie.device_mask0()[None, None]
-                 if self.trie is not None else jnp.float32(0.0))
         logits = jnp.broadcast_to(logits0[:, None, :],
                                   (R, gr.beam_width, self.cfg.vocab_size))
+        if self._sparse:
+            toks, cids = self.trie.device_children(0)
+            return xbeam.sparse_beam_step(state, logits, toks, cids, gr)
+        mask0 = (self.trie.device_mask0()[None, None]
+                 if self.trie is not None else jnp.float32(0.0))
         return xbeam.beam_step(state, logits, mask0, gr)
 
     def beam_phase(self, params, state: xbeam.BeamState, parent: jax.Array,
                    cache: SeparatedCache, d: int
                    ) -> Tuple[xbeam.BeamState, jax.Array, SeparatedCache]:
-        """Decode phase ``d`` (1..ND-1): one decode forward + beam step."""
+        """Decode phase ``d`` (1..ND-1): one decode forward + beam step.
+
+        Sparse mode reuses ``state.prefix_ids`` (threaded by the previous
+        phase's select) — one CSR table row lookup instead of re-walking
+        the trie over the d-token prefixes."""
         logits, cache = self.decode_step(params, state.tokens[:, :, d - 1],
                                          parent, cache)
+        if self._sparse:
+            toks, cids = self.trie.device_children(d)
+            state, parent = xbeam.sparse_beam_step(state, logits, toks,
+                                                   cids, self.gr)
+            return state, parent, cache
         if self.trie is not None:
             mask = self.trie.device_masks(d, state.tokens[:, :, :d])
         else:
@@ -257,24 +293,11 @@ class GRDecoder:
 
     @functools.partial(jax.jit, static_argnums=(0,), static_argnames=("dtype",))
     def _generate_graph(self, params, tokens, lengths, dtype=jnp.float32):
-        gr = self.gr
-        R = tokens.shape[0]
+        # one fused program: prefill + the same stepwise phase chain the
+        # continuous engine drives (dense masks or sparse trie-gather,
+        # selected by GRConfig.beam_select)
         logits0, cache = self.prefill(params, tokens, lengths, dtype)
-        state = xbeam.init_beam_state(R, gr)
-        mask0 = (self.trie.device_mask0()[None, None]
-                 if self.trie is not None else jnp.float32(0.0))
-        logits = jnp.broadcast_to(logits0[:, None, :],
-                                  (R, gr.beam_width, self.cfg.vocab_size))
-        state, parent = xbeam.beam_step(state, logits, mask0, gr)
-        for d in range(1, gr.num_decode_phases):
-            prev = state.tokens[:, :, d - 1]
-            logits, cache = self.decode_step(params, prev, parent, cache)
-            if self.trie is not None:
-                mask = self.trie.device_masks(d, state.tokens[:, :, :d])
-            else:
-                mask = jnp.float32(0.0)
-            state, parent = xbeam.beam_step(state, logits, mask, gr)
-        return {"items": state.tokens, "log_probs": state.log_probs}
+        return self.decode_from_prefill(params, logits0, cache)
 
 
 # ---------------------------------------------------------------------------
@@ -345,7 +368,11 @@ class EagerBackend:
 
     ``host_overlap`` models xSchedule's overlap of host mask generation with
     the device forward pass: the effective critical path per phase is
-    max(device_time, host_mask_time) instead of their sum."""
+    max(device_time, host_mask_time) instead of their sum.
+
+    With ``beam_select="sparse"`` there is no host mask work at all: the
+    per-phase beam step gathers from the trie's device-resident CSR child
+    tables (``host_mask_s`` stays 0 and the workspace is never touched)."""
 
     name = "eager"
 
@@ -366,15 +393,24 @@ class EagerBackend:
             t0 = time.perf_counter()
             prefill = jax.jit(lambda p, t, l: dec.prefill(p, t, l, dtype))
             step = jax.jit(dec.decode_step, donate_argnums=(3,))
-            bstep = jax.jit(functools.partial(xbeam.beam_step, gr=gr))
-            # warm the full phase chain — including every mask shape bstep
-            # will see — so steady-state calls never compile
+            if dec._sparse:
+                bstep = jax.jit(functools.partial(xbeam.sparse_beam_step,
+                                                  gr=gr))
+            else:
+                bstep = jax.jit(functools.partial(xbeam.beam_step, gr=gr))
+            # warm the full phase chain — including every mask/table shape
+            # bstep will see — so steady-state calls never compile
             R = tokens.shape[0]
             V = cfg.vocab_size
             lo, ca = prefill(params, tokens, lengths)
             st = xbeam.init_beam_state(R, gr)
             lo2 = jnp.broadcast_to(lo[:, None, :], (R, gr.beam_width, V))
-            if dec.trie is None:
+            if dec._sparse:
+                st2, par = bstep(st, lo2, *dec.trie.device_children(0))
+                warm = st2
+                for d in range(1, gr.num_decode_phases):
+                    warm, _ = bstep(warm, lo2, *dec.trie.device_children(d))
+            elif dec.trie is None:
                 st2, par = bstep(st, lo2, jnp.zeros((), jnp.float32))
             else:
                 st2, par = bstep(st, lo2,
@@ -399,10 +435,12 @@ class EagerBackend:
                 workspace=None):
         dec = self.decoder
         gr, cfg, trie = dec.gr, dec.cfg, dec.trie
+        sparse = dec._sparse
         R = tokens.shape[0]
         prefill, step, bstep, compile_s = self._programs(
             params, tokens, lengths, dtype)
-        ws = self._get_workspace(R, workspace) if trie is not None else None
+        ws = self._get_workspace(R, workspace) \
+            if (trie is not None and not sparse) else None
 
         device_s = host_s = critical_s = 0.0
         dispatches = 0
@@ -416,13 +454,16 @@ class EagerBackend:
         dispatches += 1
 
         state = xbeam.init_beam_state(R, gr)
-        if trie is not None:
-            mask = jnp.asarray(trie.host_masks(0, None))[None, None]
-        else:
-            mask = jnp.zeros((), jnp.float32)
         logits = jnp.broadcast_to(logits0[:, None, :],
                                   (R, gr.beam_width, cfg.vocab_size))
-        state, parent = bstep(state, logits, mask)
+        if sparse:
+            state, parent = bstep(state, logits, *trie.device_children(0))
+        else:
+            if trie is not None:
+                mask = jnp.asarray(trie.host_masks(0, None))[None, None]
+            else:
+                mask = jnp.zeros((), jnp.float32)
+            state, parent = bstep(state, logits, mask)
         for d in range(1, gr.num_decode_phases):
             t0 = time.perf_counter()
             logits, cache = step(params, state.tokens[:, :, d - 1],
@@ -432,7 +473,7 @@ class EagerBackend:
             dispatches += 1
 
             th = 0.0
-            if trie is not None:
+            if trie is not None and not sparse:
                 t0 = time.perf_counter()
                 prefix = np.asarray(state.tokens[:, :, :d])
                 if d == gr.num_decode_phases - 1:
@@ -447,7 +488,11 @@ class EagerBackend:
             critical_s += max(dev_dt, th) if self.host_overlap \
                 else dev_dt + th
             t0 = time.perf_counter()
-            state, parent = bstep(state, logits, mask)
+            if sparse:
+                state, parent = bstep(state, logits,
+                                      *trie.device_children(d))
+            else:
+                state, parent = bstep(state, logits, mask)
             bs_dt = time.perf_counter() - t0
             device_s += bs_dt
             critical_s += bs_dt

@@ -20,6 +20,12 @@ Two mask-generation paths, both exercised by the serving engine:
   * ``device_masks`` — jittable searchsorted membership, the "fully
                        device-resident" variant of paper §9.5, used inside
                        the graph-dispatched generate loop.
+
+Plus the sparse *gather* path (``beam_select="sparse"``): per-level
+padded-CSR child tables built once at load time (the paper's data-structure
+reuse) let beam expansion gather logits at each prefix's <= ``max_fanout``
+valid children instead of masking the whole vocab — see
+``xbeam.sparse_beam_step``.
 """
 
 from __future__ import annotations
@@ -31,6 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 MASK_NEG = -1e9
+
+#: padding sentinel in the CSR child tables (valid tokens/ids are >= 0)
+CHILD_PAD = -1
 
 
 class ItemTrie:
@@ -54,10 +63,48 @@ class ItemTrie:
         # dense first-level mask, precomputed at "model load" time
         self.dense_mask0 = np.full((vocab,), MASK_NEG, np.float32)
         self.dense_mask0[self.levels[0]] = 0.0
-        # device copies
-        self._dev_levels = [jnp.asarray(np.minimum(l, 2**31 - 1).astype(np.int32))
+        # compact keys must fit int32 end to end: the device membership path
+        # forms candidate keys up to max_parent * vocab + (vocab - 1), and a
+        # silent clamp would turn an overflowed key into FALSE membership
+        max_parent = max((len(l) for l in self.levels[:-1]), default=1)
+        if max_parent * vocab + vocab >= 2**31:
+            raise ValueError(
+                f"trie compact keys overflow int32: {max_parent} parents x "
+                f"vocab {vocab} forms keys up to {max_parent * vocab + vocab}"
+                f" >= 2^31; shrink the catalog or the per-level vocab")
+        # --- padded-CSR child tables (beam_select="sparse") ----------------
+        # For level d, row p lists the valid continuations of compact prefix
+        # id p (indexing levels[d-1]; the single root for d == 0): child
+        # token and child compact id (an index into levels[d]), CHILD_PAD
+        # padded to the level's max fanout.  Row P_d (one past the last
+        # parent) is all padding and serves dead beams (prefix id < 0).
+        # Rows are token-ascending (levels are sorted), which keeps sparse
+        # tie-breaking aligned with the dense path's token order.
+        self.child_tokens: List[np.ndarray] = []
+        self.child_ids: List[np.ndarray] = []
+        self.max_fanout: List[int] = []
+        for d, level in enumerate(self.levels):
+            P = 1 if d == 0 else len(self.levels[d - 1])
+            parent = level // vocab                  # all 0 at d == 0
+            tok = (level % vocab).astype(np.int32)
+            counts = np.bincount(parent, minlength=P)
+            F = max(int(counts.max()), 1) if counts.size else 1
+            tt = np.full((P + 1, F), CHILD_PAD, np.int32)
+            it = np.full((P + 1, F), CHILD_PAD, np.int32)
+            starts = np.concatenate([[0], np.cumsum(counts)])
+            slot = np.arange(len(level)) - starts[parent]
+            tt[parent, slot] = tok
+            it[parent, slot] = np.arange(len(level), dtype=np.int32)
+            self.child_tokens.append(tt)
+            self.child_ids.append(it)
+            self.max_fanout.append(F)
+        # device copies, uploaded once (paper §6.3 data-structure reuse)
+        self._dev_levels = [jnp.asarray(l.astype(np.int32))
                             for l in self.levels]
         self._dev_mask0 = jnp.asarray(self.dense_mask0)
+        self._dev_children = [(jnp.asarray(t), jnp.asarray(i))
+                              for t, i in zip(self.child_tokens,
+                                              self.child_ids)]
 
     # ------------------------------------------------------------- host path
     def prefix_ids(self, tokens: np.ndarray) -> np.ndarray:
@@ -105,6 +152,12 @@ class ItemTrie:
     # ----------------------------------------------------------- device path
     def device_mask0(self) -> jax.Array:
         return self._dev_mask0
+
+    def device_children(self, step: int) -> Tuple[jax.Array, jax.Array]:
+        """Device-resident CSR child tables for beam phase ``step``:
+        ``(child_tokens, child_ids)``, each ``(P_step + 1, max_fanout)``
+        int32 with CHILD_PAD padding (see ``xbeam.sparse_beam_step``)."""
+        return self._dev_children[step]
 
     def device_masks(self, step: int, prefix_tokens: jax.Array) -> jax.Array:
         """Jittable masks: prefix_tokens (R, BW, step) int32 -> (R, BW, V).

@@ -11,6 +11,14 @@ versus a full sort's O(BW·V·log(BW·V)) — the same asymptotic saving the hea
 provides, with MXU/VPU-friendly shapes.  (DESIGN.md §2 documents this
 adaptation.)
 
+Sparse path (``sparse_beam_step``): the trie bounds every prefix's fanout,
+so instead of masking a dense (R, BW, V) grid the expansion gathers logits
+at each beam's <= ``max_fanout`` valid children (padded-CSR tables from
+``ItemTrie``) and runs the two-stage Top-K over (R, BW, F) — the TPU-shaped
+analogue of the paper's early sorting termination: the sort never *sees*
+the invalid V - F candidates.  Only the log-softmax denominator still touches
+the full vocab (one logsumexp per beam).
+
 Host path (faithful): ``host_beam_select`` implements the paper's global
 min-heap with per-beam early termination (Fig 11) over per-beam descending
 candidate lists; it is used on the scheduler tier and in tests/benchmarks,
@@ -39,17 +47,24 @@ from repro.config import GRConfig
 class BeamState:
     """Fixed-shape beam search state for R requests × BW beams.
 
-    tokens    : (R, BW, ND) int32 — generated TIDs (valid cols: < step)
-    log_probs : (R, BW) f32 — accumulated log-probabilities
-    step      : () int32
+    tokens     : (R, BW, ND) int32 — generated TIDs (valid cols: < step)
+    log_probs  : (R, BW) f32 — accumulated log-probabilities
+    step       : () int32
+    prefix_ids : (R, BW) int32 — compact trie id of each beam's prefix
+                 (index into the trie level for the last expanded phase;
+                 -1 = dead beam).  Maintained by ``sparse_beam_step`` so
+                 phase d is one table row lookup instead of re-walking the
+                 trie; carried untouched (may be None) on the dense path.
     """
 
     tokens: jax.Array
     log_probs: jax.Array
     step: jax.Array
+    prefix_ids: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return ((self.tokens, self.log_probs, self.step), None)
+        return ((self.tokens, self.log_probs, self.step, self.prefix_ids),
+                None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -63,11 +78,14 @@ def init_beam_state(requests: int, gr: GRConfig,
     if abstract:
         return BeamState(jax.ShapeDtypeStruct(shape_tok, jnp.int32),
                          jax.ShapeDtypeStruct(shape_lp, jnp.float32),
-                         jax.ShapeDtypeStruct((), jnp.int32))
+                         jax.ShapeDtypeStruct((), jnp.int32),
+                         jax.ShapeDtypeStruct(shape_lp, jnp.int32))
     # beam 0 is the live beam at step 0 (all beams share the prompt); the
     # -inf tail keeps duplicates out of the first global top-BW
     lp = jnp.full(shape_lp, -jnp.inf, jnp.float32).at[:, 0].set(0.0)
-    return BeamState(jnp.zeros(shape_tok, jnp.int32), lp, jnp.int32(0))
+    # every beam starts at the trie root (compact id 0)
+    return BeamState(jnp.zeros(shape_tok, jnp.int32), lp, jnp.int32(0),
+                     jnp.zeros(shape_lp, jnp.int32))
 
 
 def beam_step(state: BeamState, logits: jax.Array, mask: jax.Array,
@@ -96,7 +114,76 @@ def beam_step(state: BeamState, logits: jax.Array, mask: jax.Array,
     tokens = jnp.take_along_axis(state.tokens, parent[..., None], axis=1)
     tokens = jax.lax.dynamic_update_index_in_dim(
         tokens, token, state.step, axis=2)
-    new = BeamState(tokens=tokens, log_probs=v2, step=state.step + 1)
+    new = BeamState(tokens=tokens, log_probs=v2, step=state.step + 1,
+                    prefix_ids=state.prefix_ids)
+    return new, parent
+
+
+def sparse_beam_step(state: BeamState, logits: jax.Array,
+                     child_tokens: jax.Array, child_ids: jax.Array,
+                     gr: GRConfig) -> Tuple[BeamState, jax.Array]:
+    """Trie-gather beam expansion over padded-CSR child tables.
+
+    Selection-equivalent to ``beam_step`` with a trie mask, but the sort
+    pool is each beam's <= F valid children instead of the whole vocab:
+
+      denominator : ONE logsumexp over V per beam (the log-softmax
+                    normalizer is irreducibly a full-row reduction)
+      numerator   : gather logits at the beam's child tokens  (R, BW, F)
+      select      : two-stage Top-K over (R, BW, F) — stage 1 K=min(K, F)
+
+    No dense (R, BW, V) mask is ever materialized, and the float sequence
+    mirrors ``jax.nn.log_softmax`` exactly (shift by stop-gradient max,
+    subtract the shifted logsumexp), so live-beam selections are
+    bit-identical to the dense path.
+
+    logits                 : (R, BW, V) model outputs for each live beam
+    child_tokens/child_ids : (P + 1, F) int32 tables for this phase's trie
+        level (``ItemTrie.device_children``); CHILD_PAD (-1) padding, row P
+        all-padding for dead beams
+    state.prefix_ids       : (R, BW) compact ids into the PARENT level
+        (-1 = dead beam)
+
+    Returns (new_state, parent (R, BW) int32); ``new_state.prefix_ids``
+    are compact ids into THIS level (-1 where selection fell on padding —
+    a dead beam, possible only when fewer than BW valid continuations
+    exist).  Dead selections store token 0 so downstream embedding gathers
+    stay in range; their log_probs sit at the mask floor.
+    """
+    R, BW, V = logits.shape
+    P = child_tokens.shape[0] - 1
+    F = child_tokens.shape[1]
+    K = min(gr.top_k, F)
+    x = logits.astype(jnp.float32)
+    x_max = jnp.max(x, axis=-1, initial=-jnp.inf, keepdims=True)
+    shifted = x - jax.lax.stop_gradient(x_max)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+
+    row = jnp.where(state.prefix_ids < 0, P, state.prefix_ids)  # (R, BW)
+    toks = child_tokens[row]                                    # (R, BW, F)
+    cids = child_ids[row]
+    valid = toks >= 0
+    g = jnp.take_along_axis(shifted, jnp.maximum(toks, 0), axis=-1)
+    logp = jnp.where(valid, g - lse, jnp.float32(gr.mask_neg))
+    cand = state.log_probs[..., None] + logp                    # (R, BW, F)
+
+    # stage 1: per-beam Top-K over the fanout slots (token-ascending rows,
+    # so ties break exactly like the dense path's token order)
+    v1, i1 = jax.lax.top_k(cand, K)                             # (R, BW, K)
+    # stage 2: global Top-BW over the BW*K pool
+    v2, i2 = jax.lax.top_k(v1.reshape(R, BW * K), BW)           # (R, BW)
+    parent = (i2 // K).astype(jnp.int32)
+    slot = jnp.take_along_axis(i1.reshape(R, BW * K), i2, axis=1
+                               ).astype(jnp.int32)
+    flat = parent * F + slot                                    # into BW*F
+    token = jnp.take_along_axis(toks.reshape(R, BW * F), flat, axis=1)
+    new_pid = jnp.take_along_axis(cids.reshape(R, BW * F), flat, axis=1)
+
+    tokens = jnp.take_along_axis(state.tokens, parent[..., None], axis=1)
+    tokens = jax.lax.dynamic_update_index_in_dim(
+        tokens, jnp.maximum(token, 0), state.step, axis=2)
+    new = BeamState(tokens=tokens, log_probs=v2, step=state.step + 1,
+                    prefix_ids=new_pid)
     return new, parent
 
 
@@ -119,7 +206,12 @@ def host_beam_select(topk_vals: np.ndarray, topk_idx: np.ndarray, bw: int
     Top-``bw`` plus traversal statistics.
     """
     BW_in, K = topk_vals.shape
-    heap: List[Tuple[float, int, int]] = []   # (lp, beam, slot) min-heap
+    # (lp, -beam, -slot) min-heap: among equal log-probs the heap minimum is
+    # the LATEST-visited entry, so a tied replacement evicts it and keeps the
+    # earliest (beam, slot) — the stable order naive_beam_select's argsort
+    # produces.  (Plain (lp, beam, slot) entries + reverse=True broke
+    # duplicate-score ties by descending beam/slot.)
+    heap: List[Tuple[float, int, int]] = []
     visited = 0
     terminated_early = 0
     for b in range(BW_in):
@@ -127,16 +219,19 @@ def host_beam_select(topk_vals: np.ndarray, topk_idx: np.ndarray, bw: int
             lp = float(topk_vals[b, s])
             visited += 1
             if len(heap) < bw:
-                heapq.heappush(heap, (lp, b, s))
+                heapq.heappush(heap, (lp, -b, -s))
             elif lp > heap[0][0]:
-                heapq.heapreplace(heap, (lp, b, s))
+                heapq.heapreplace(heap, (lp, -b, -s))
             else:
                 # this beam's list is descending: nothing below can enter
+                # (a tied candidate is also correctly rejected — it comes
+                # later in traversal order than everything already held)
                 terminated_early += 1
                 break
-    sel = sorted(heap, reverse=True)
-    parent = np.array([b for _, b, _ in sel], np.int32)
-    slot = np.array([s for _, _, s in sel], np.int32)
+    # descending log-prob; ties by ascending (beam, slot)
+    sel = sorted(heap, key=lambda e: (-e[0], -e[1], -e[2]))
+    parent = np.array([-nb for _, nb, _ in sel], np.int32)
+    slot = np.array([-ns for _, _, ns in sel], np.int32)
     token = topk_idx[parent, slot].astype(np.int32)
     lp = np.array([v for v, _, _ in sel], np.float32)
     stats = {"visited": visited, "total": BW_in * K,

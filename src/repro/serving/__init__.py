@@ -1,7 +1,7 @@
 from repro.serving.api import RequestHandle, ServeResult, ServingSystem
 from repro.serving.engine import GREngine, EngineStats
-from repro.serving.metrics import (engine_summary, latency_summary,
-                                   percentile, ttft_summary)
+from repro.serving.metrics import (beam_pool_summary, engine_summary,
+                                   latency_summary, percentile, ttft_summary)
 from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
                                    StepPlan)
 from repro.serving.scheduler import (BucketAffinityBatcher,
@@ -14,6 +14,7 @@ from repro.serving.server import ServerReport, run_server
 __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
            "GREngine", "EngineStats",
            "latency_summary", "engine_summary", "percentile", "ttft_summary",
+           "beam_pool_summary",
            "BatchPlan", "RequestState", "Phase", "StepEntry", "StepPlan",
            "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",
            "BucketAffinityBatcher", "ChunkedPrefillScheduler",

@@ -49,6 +49,13 @@ class EngineStats:
     device_s: float = 0.0
     host_mask_s: float = 0.0
     compile_s: float = 0.0
+    # --- beam-select candidate-pool accounting (paper §6 early termination):
+    # one unit = one (request, phase) beam select; the pool width is what
+    # each beam's sort scans — trie max fanout (sparse) or V (dense)
+    beam_pool_n: int = 0
+    beam_pool_sum: int = 0
+    beam_pool_max: int = 0
+    beam_pool_dense_sum: int = 0    # the V-wide pool the dense path scans
 
 
 @dataclasses.dataclass
@@ -73,12 +80,14 @@ class GREngine:
                  attention_impl: str = "staged",
                  spec: Optional[EngineSpec] = None):
         self.cfg = cfg
-        self.gr = gr
         self.params = params
         self.trie = trie
         self.serve_cfg = serve_cfg
         self.spec = spec if spec is not None else \
             EngineSpec.from_serve_config(serve_cfg, attention_impl)
+        if self.spec.beam_select and self.spec.beam_select != gr.beam_select:
+            gr = dataclasses.replace(gr, beam_select=self.spec.beam_select)
+        self.gr = gr
         self.decoder = GRDecoder(cfg, gr, trie, self.spec.attention_impl)
         self.backend: ExecutionBackend = make_backend(
             self.spec.backend, self.decoder,
@@ -95,6 +104,19 @@ class GREngine:
                                   static_argnames=("d",))
 
     # ---------------------------------------------------------------- utils
+    def _track_pool(self, phases, requests: int = 1) -> None:
+        """Accumulate beam-select candidate-pool stats for ``requests``
+        requests running the given decode ``phases`` (paper §6: the fraction
+        of sort work the sparse path never performs)."""
+        pools = self.decoder.candidate_pool_sizes()
+        V = self.cfg.vocab_size
+        for d in phases:
+            f = pools[d]
+            self.stats.beam_pool_n += requests
+            self.stats.beam_pool_sum += requests * f
+            self.stats.beam_pool_dense_sum += requests * V
+            self.stats.beam_pool_max = max(self.stats.beam_pool_max, f)
+
     def _pad_batch(self, plan: BatchPlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
         R, S = plan.size, plan.bucket_len
         toks = np.zeros((R, S), np.int32)
@@ -117,6 +139,7 @@ class GREngine:
             r.log_probs = lps[i]
         self.stats.batches += 1
         self.stats.requests += plan.size
+        self._track_pool(range(self.gr.num_decode_phases), plan.size)
         self.stats.padded_tokens += plan.padded_tokens
         self.stats.prompt_tokens += sum(r.prompt_len for r in plan.requests)
         self.stats.dispatches += int(timing["dispatches"])
@@ -189,6 +212,7 @@ class GREngine:
                     device_s += dt
                     compile_s += cs
                     dispatches += 1
+                    self._track_pool((0,))
                     if nd <= 1:
                         self._finalize(r, rt)
             else:
@@ -201,6 +225,7 @@ class GREngine:
                 device_s += dt
                 compile_s += cs
                 dispatches += 1
+                self._track_pool((d,))
                 self.stats.padded_tokens += self.gr.beam_width
                 if d == nd - 1:
                     self._finalize(r, rt)

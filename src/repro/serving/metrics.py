@@ -24,6 +24,27 @@ def engine_summary(stats) -> Dict[str, float]:
     }
 
 
+def beam_pool_summary(stats) -> Dict[str, float]:
+    """Beam-select candidate-pool stats (paper §6 early sorting termination).
+
+    One unit = one (request, phase) beam select; ``mean_pool``/``max_pool``
+    are the per-beam candidate-pool widths the select scanned (trie max
+    fanout under ``beam_select="sparse"``, the full vocab under "dense"),
+    and ``saved_fraction`` is the fraction of dense sort work the sparse
+    path never performed (0.0 on the dense path by construction)."""
+    n = stats.beam_pool_n
+    if not n:
+        return {"phases": 0, "mean_pool": float("nan"), "max_pool": 0,
+                "saved_fraction": 0.0}
+    return {
+        "phases": n,
+        "mean_pool": stats.beam_pool_sum / n,
+        "max_pool": int(stats.beam_pool_max),
+        "saved_fraction":
+            1.0 - stats.beam_pool_sum / max(stats.beam_pool_dense_sum, 1),
+    }
+
+
 def latency_summary(latencies_s: Sequence[float],
                     duration_s: float) -> Dict[str, float]:
     arr = np.asarray(latencies_s, np.float64)

@@ -28,8 +28,8 @@ from typing import Dict, List
 from repro.config import ServeConfig
 from repro.serving.api import ServingSystem
 from repro.serving.engine import GREngine
-from repro.serving.metrics import engine_summary, latency_summary, \
-    ttft_summary
+from repro.serving.metrics import beam_pool_summary, engine_summary, \
+    latency_summary, ttft_summary
 from repro.serving.request import RequestState
 
 
@@ -42,6 +42,10 @@ class ServerReport:
     #: time-to-first-beam-phase distribution; equals the latency
     #: distribution under monolithic policies (see metrics.ttft_summary)
     ttft: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: beam-select candidate-pool summary (paper §6 early termination):
+    #: mean/max pool width per (request, phase) and the fraction of dense
+    #: sort work saved (see metrics.beam_pool_summary)
+    beam_pool: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def slo_violations(self) -> int:
@@ -67,4 +71,5 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
         engine_stats=engine_summary(engine.stats),
         slo_ms=serve_cfg.slo_ms,
         ttft=ttft_summary(ttft),
+        beam_pool=beam_pool_summary(engine.stats),
     )

@@ -1,10 +1,12 @@
-"""Valid-path constraint: trie masks (host + device), workspace reuse."""
+"""Valid-path constraint: trie masks (host + device), workspace reuse,
+padded-CSR child tables, and int32 key-overflow rejection."""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.item_trie import MASK_NEG, ItemTrie, MaskWorkspace
+from repro.core.item_trie import (CHILD_PAD, MASK_NEG, ItemTrie,
+                                  MaskWorkspace)
 from repro.data.items import gen_catalog
 
 
@@ -80,3 +82,69 @@ def test_invalid_prefix_masks_everything(trie):
     if not exists:
         m = t.host_masks(2, bogus)
         assert np.all(m == MASK_NEG)
+
+
+# ---------------------------------------------------------------------------
+# Padded-CSR child tables (beam_select="sparse")
+# ---------------------------------------------------------------------------
+
+def test_child_table_root_lists_level0(trie):
+    t, catalog = trie
+    tok = t.child_tokens[0][0]
+    ids = t.child_ids[0][0]
+    live = tok != CHILD_PAD
+    np.testing.assert_array_equal(tok[live], t.levels[0])
+    np.testing.assert_array_equal(ids[live], np.arange(len(t.levels[0])))
+    # the dead-beam row is all padding at every level
+    for d in range(t.nd):
+        assert np.all(t.child_tokens[d][-1] == CHILD_PAD)
+        assert np.all(t.child_ids[d][-1] == CHILD_PAD)
+
+
+@pytest.mark.parametrize("step", [1, 2])
+def test_child_tables_match_masks(trie, step):
+    """Row ``pid`` of level ``step`` lists exactly the mask's valid tokens,
+    and each child id indexes the child's compact key in the next level."""
+    t, catalog = trie
+    rng = np.random.default_rng(step + 20)
+    prefixes = np.concatenate([
+        catalog[rng.choice(len(catalog), 8)][:, :step],
+        rng.integers(0, 512, size=(8, step)),
+    ]).reshape(2, 8, step)
+    pid = t.prefix_ids(prefixes)
+    masks = t.host_masks(step, prefixes)
+    P = t.child_tokens[step].shape[0] - 1
+    for r in range(2):
+        for b in range(8):
+            row = P if pid[r, b] < 0 else pid[r, b]
+            tok = t.child_tokens[step][row]
+            ids = t.child_ids[step][row]
+            live = tok != CHILD_PAD
+            got = set(tok[live].tolist())
+            want = set(np.nonzero(masks[r, b] == 0.0)[0].tolist())
+            assert got == want
+            # child compact ids decode back to (parent, token) keys
+            keys = t.levels[step][ids[live]]
+            np.testing.assert_array_equal(
+                keys, pid[r, b] * t.vocab + tok[live])
+            # rows are token-ascending (sparse/dense tie-break alignment)
+            assert np.all(np.diff(tok[live]) > 0)
+
+
+def test_max_fanout_bounds_rows(trie):
+    t, _ = trie
+    for d in range(t.nd):
+        counts = np.bincount(t.levels[d] // t.vocab,
+                             minlength=t.child_tokens[d].shape[0] - 1)
+        assert t.max_fanout[d] == counts.max()
+        assert t.child_tokens[d].shape[1] == t.max_fanout[d]
+
+
+def test_int32_key_overflow_raises():
+    """A catalog whose compact keys would exceed int32 must be rejected at
+    load time (the old path silently clamped and corrupted membership)."""
+    vocab = 65536
+    rng = np.random.default_rng(0)
+    items = rng.integers(0, vocab, size=(60_000, 2))
+    with pytest.raises(ValueError, match="int32"):
+        ItemTrie(items, vocab)

@@ -1,0 +1,190 @@
+"""Sparse (trie-gather) vs dense (masked) beam expansion equivalence.
+
+ISSUE 4 tentpole lockdown: ``beam_select="sparse"`` gathers logits at each
+beam's padded-CSR trie children (``ItemTrie.device_children``) and runs the
+two-stage Top-K over the (R, BW, max_fanout) pool — it must select exactly
+what the dense (R, BW, V)-mask path selects: bit-identical items, matching
+log-probs, through both execution backends and the serving facade, and
+degrade identically to the mask floor when prefixes fall out of the trie
+(dead beams).
+
+The core checks are plain seeded functions so they ALWAYS run; when
+hypothesis is available (requirements-dev.txt, importorskip'd like
+test_property.py) the same checks additionally run with drawn lengths and
+seeds.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.core.gr_decode import GRDecoder
+from repro.core.xbeam import BeamState, beam_step, sparse_beam_step
+from repro.data import gen_catalog, gen_histories
+from repro.serving import GREngine, ServingSystem, beam_pool_summary
+
+SETTINGS = dict(max_examples=8, deadline=None)
+S_MAX = 32          # fixed padded prompt buffer keeps jit caches warm
+LIVE = -1e8         # log-probs above this are live beams (mask floor -1e9)
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=8, top_k=8, num_decode_phases=3,
+                  num_items=300, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    dec_d = GRDecoder(cfg, gr, trie)
+    dec_s = GRDecoder(cfg, dataclasses.replace(gr, beam_select="sparse"),
+                      trie)
+    params = dec_d.model.init(jax.random.PRNGKey(0))
+    return cfg, gr, trie, catalog, dec_d, dec_s, params
+
+
+def _prompts(cfg, lens, seed):
+    rng = np.random.default_rng(seed)
+    R = len(lens)
+    toks = np.zeros((R, S_MAX), np.int32)
+    for r, L in enumerate(lens):
+        toks[r, :L] = rng.integers(0, cfg.vocab_size, L)
+    return jnp.asarray(toks), jnp.asarray(np.asarray(lens, np.int32))
+
+
+def check_generate_equivalence(world, lens, seed, mode):
+    """generate() across beam_select modes: bit-identical items, equal lp."""
+    cfg, gr, trie, catalog, dec_d, dec_s, params = world
+    toks, lengths = _prompts(cfg, lens, seed)
+    out_d = dec_d.generate(params, toks, lengths, mode=mode)
+    out_s = dec_s.generate(params, toks, lengths, mode=mode)
+    np.testing.assert_array_equal(np.asarray(out_s["items"]),
+                                  np.asarray(out_d["items"]))
+    np.testing.assert_allclose(np.asarray(out_s["log_probs"]),
+                               np.asarray(out_d["log_probs"]), atol=1e-6)
+    # and the results are real catalog items
+    valid = {tuple(r) for r in catalog.tolist()}
+    assert all(tuple(i) in valid
+               for r in np.asarray(out_s["items"]) for i in r)
+
+
+# ---------------------------------------------------------------------------
+# Always-on seeded instances
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["graph", "eager"])
+@pytest.mark.parametrize("lens,seed", [
+    ([S_MAX, 19], 0),
+    ([5, 31, 12], 1),
+])
+def test_generate_sparse_matches_dense(world, mode, lens, seed):
+    check_generate_equivalence(world, lens, seed, mode)
+
+
+def test_sparse_beam_step_matches_masked_step(world):
+    """One mid-search phase: sparse_beam_step vs beam_step + device_masks
+    on the same live state — identical parents, tokens, and log-probs."""
+    cfg, gr, trie, catalog, dec_d, dec_s, params = world
+    rng = np.random.default_rng(3)
+    R, BW, V = 2, gr.beam_width, cfg.vocab_size
+    # valid 1-token prefixes drawn from the catalog (all beams live)
+    pref = catalog[rng.choice(len(catalog), R * BW)][:, :1].reshape(R, BW, 1)
+    pid = trie.prefix_ids(pref)
+    assert (pid >= 0).all()
+    tokens = np.zeros((R, BW, gr.num_decode_phases), np.int64)
+    tokens[:, :, :1] = pref
+    lp = np.sort(rng.normal(size=(R, BW)))[:, ::-1].astype(np.float32)
+    state = BeamState(tokens=jnp.asarray(tokens, jnp.int32),
+                      log_probs=jnp.asarray(lp), step=jnp.int32(1),
+                      prefix_ids=jnp.asarray(pid, jnp.int32))
+    logits = jnp.asarray(rng.normal(size=(R, BW, V)) * 3.0, jnp.float32)
+
+    mask = trie.device_masks(1, jnp.asarray(pref, jnp.int32))
+    new_d, par_d = beam_step(state, logits, mask, gr)
+    new_s, par_s = sparse_beam_step(state, logits,
+                                    *trie.device_children(1), gr)
+    np.testing.assert_array_equal(np.asarray(par_s), np.asarray(par_d))
+    np.testing.assert_array_equal(np.asarray(new_s.tokens),
+                                  np.asarray(new_d.tokens))
+    np.testing.assert_array_equal(np.asarray(new_s.log_probs),
+                                  np.asarray(new_d.log_probs))
+    # threaded prefix ids name exactly the selected 2-prefixes
+    got_pid = np.asarray(new_s.prefix_ids)
+    want_pid = trie.prefix_ids(np.asarray(new_s.tokens)[:, :, :2])
+    np.testing.assert_array_equal(got_pid, want_pid)
+
+
+def test_dead_beams_degrade_identically(world):
+    """A catalog smaller than the beam width forces dead beams: live
+    selections must still match; dead ones sit at the mask floor in both."""
+    cfg, gr, trie, catalog, dec_d, dec_s, params = world
+    small = gen_catalog(4, cfg.vocab_size, 3, seed=9)
+    strie = ItemTrie(small, cfg.vocab_size)
+    d = GRDecoder(cfg, gr, strie)
+    s = GRDecoder(cfg, dataclasses.replace(gr, beam_select="sparse"), strie)
+    toks, lengths = _prompts(cfg, [14, 22], 5)
+    out_d = d.generate(params, toks, lengths, mode="graph")
+    out_s = s.generate(params, toks, lengths, mode="graph")
+    lp_d = np.asarray(out_d["log_probs"])
+    lp_s = np.asarray(out_s["log_probs"])
+    live_d, live_s = lp_d > LIVE, lp_s > LIVE
+    np.testing.assert_array_equal(live_s, live_d)
+    assert live_d.any() and not live_d.all()
+    np.testing.assert_allclose(lp_s[live_s], lp_d[live_d], atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(out_s["items"])[live_s], np.asarray(out_d["items"])[live_d])
+    # live beams are real items even when most of the pool is dead
+    valid = {tuple(r) for r in small.tolist()}
+    assert all(tuple(i) in valid for i in np.asarray(out_s["items"])[live_s])
+
+
+def test_serving_facade_sparse_matches_dense(world):
+    """The ServeConfig/EngineSpec knob end to end, monolithic + chunked:
+    same items per request, and the beam_pool report shows the saving."""
+    cfg, gr, trie, catalog, dec_d, dec_s, params = world
+    hist = gen_histories(catalog, 4, max_tokens=S_MAX, seed=2)
+    got = {}
+    pool = {}
+    for mode in ("dense", "sparse"):
+        for policy in ("token-capacity", "chunked"):
+            scfg = ServeConfig(max_batch_tokens=512, max_batch_requests=4,
+                               scheduler_policy=policy, beam_select=mode,
+                               prefill_chunk_tokens=64, num_streams=1)
+            eng = GREngine(cfg, gr, params, trie, scfg,
+                           spec=EngineSpec.from_serve_config(scfg))
+            assert eng.gr.beam_select == mode      # knob reached the engine
+            system = ServingSystem(eng, scfg)
+            hs = [system.submit(h, arrival_s=0.001 * i)
+                  for i, h in enumerate(hist)]
+            system.drain()
+            got[(mode, policy)] = [np.asarray(h.result().items) for h in hs]
+            pool[(mode, policy)] = beam_pool_summary(eng.stats)
+    for policy in ("token-capacity", "chunked"):
+        for a, b in zip(got[("dense", policy)], got[("sparse", policy)]):
+            np.testing.assert_array_equal(b, a)
+        assert pool[("dense", policy)]["saved_fraction"] == 0.0
+        assert pool[("sparse", policy)]["saved_fraction"] > 0.5
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-drawn instances (skipped when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(**SETTINGS)
+    @given(st.lists(st.integers(4, S_MAX), min_size=2, max_size=2),
+           st.integers(0, 2**31 - 1))
+    def test_generate_equivalence_property(world, lens, seed):
+        # fixed R keeps the jitted programs cached across examples
+        check_generate_equivalence(world, lens, seed, "eager")

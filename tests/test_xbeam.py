@@ -88,6 +88,37 @@ def test_host_heap_matches_full_sort(seed):
     assert stats["visited"] <= BW_in * K
 
 
+def test_host_heap_tie_break_matches_full_sort():
+    """Duplicate scores across beams: selection must come back in the
+    stable full-sort order — descending log-prob, ties by ASCENDING
+    (beam, slot).  (The old ``sorted(heap, reverse=True)`` broke ties by
+    descending beam/slot and disagreed with ``naive_beam_select``.)"""
+    vals = np.array([[5.0, 3.0, 3.0, 1.0],
+                     [5.0, 3.0, 2.0, 1.0],
+                     [3.0, 3.0, 3.0, 0.0]], np.float64)
+    idx = np.tile(np.arange(4), (3, 1))
+    p, t, lp, _ = host_beam_select(vals, idx, 4)
+    # full candidate lists (K == V), so the heap sees the same grid
+    p_ref, t_ref, lp_ref = naive_beam_select(vals, 4)
+    np.testing.assert_array_equal(p, p_ref)
+    np.testing.assert_array_equal(t, t_ref)
+    np.testing.assert_array_equal(lp, lp_ref.astype(np.float32))
+
+
+def test_host_heap_tie_break_random_duplicates():
+    """Randomized duplicate-heavy grids: elementwise agreement with the
+    stable full sort (not just set equality)."""
+    rng = np.random.default_rng(42)
+    for _ in range(20):
+        cand = rng.integers(0, 4, size=(6, 8)).astype(np.float64)
+        vals = -np.sort(-cand, axis=1)
+        idx = np.argsort(-cand, axis=1, kind="stable")
+        p, t, lp, _ = host_beam_select(vals, idx, 6)
+        p_ref, t_ref, lp_ref = naive_beam_select(cand, 6)
+        np.testing.assert_array_equal(lp, lp_ref.astype(np.float32))
+        np.testing.assert_array_equal(p, p_ref)
+
+
 def test_host_heap_early_termination_saves_work():
     """Skewed candidates: the heap should terminate beams early and visit
     far fewer than BW_in*K leaves."""
