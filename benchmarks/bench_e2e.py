@@ -17,6 +17,13 @@ Plus the ISSUE-4 beam-select scenario: identical traffic served with
 over padded-CSR child tables), with the candidate-pool / sort-work-saved
 stats from ``ServerReport.beam_pool``.
 
+Plus the ISSUE-5 pipeline scenario: the same mixed long/short chunked
+traffic served by ``executor="sequential"`` (one blocked dispatch per step
+entry) vs ``"pipelined"`` (same-phase decode entries fused into one batched
+dispatch over the paged shared-KV arena, end-of-step sync), comparing
+dispatches per step, batched decode width, and p99 TTFT/latency; the
+record lands in the standard bench JSON (``experiments/bench/``).
+
 Batch compute is real measured CPU wall time; queueing/streams are composed
 on the simulated clock (see serving/server.py for the rationale).  The
 shapes are scaled to CPU (reduced model, BW=16) — the paper's relative
@@ -28,13 +35,13 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench_json
 from repro.config import EngineSpec, GRConfig, ServeConfig
 from repro.configs import get_config
 from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
-from repro.serving import GREngine, run_server
+from repro.serving import GREngine, make_engine, run_server
 
 
 def mixed_prefill(cfg, gr, catalog, trie, params):
@@ -86,6 +93,54 @@ def beam_select_modes(cfg, gr, catalog, trie, params):
             f";sort_saved={bp['saved_fraction']*100:.0f}%")
 
 
+def pipeline_executors(cfg, gr, catalog, trie, params):
+    """ISSUE 5: mixed long/short chunked traffic, sequential vs pipelined
+    step executor — dispatch-count reduction, batched decode width, and the
+    p99 TTFT/latency win, recorded to the standard bench JSON."""
+    short = gen_histories(catalog, 40, max_tokens=48, seed=8)
+    long_ = gen_histories(catalog, 6, max_tokens=384, min_tokens=300, seed=9)
+    hist = []
+    for i in range(48):
+        hist.append(long_[i // 7 % len(long_)] if i % 7 == 0
+                    else short[i % len(short)])
+    trace = poisson_trace(hist, rps=120.0, duration_s=0.4, seed=10)
+    record = {"scenario": "pipeline", "requests": len(trace)}
+    for executor in ("sequential", "pipelined"):
+        scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
+                           batch_wait_quota_ms=5.0, num_streams=2,
+                           scheduler_policy="chunked",
+                           prefill_chunk_tokens=128, executor=executor)
+        eng = make_engine(cfg, gr, params, trie, scfg,
+                          spec=EngineSpec(backend="graph", num_streams=2))
+        rep = run_server(eng, trace, scfg)
+        s, t, pl, es = rep.summary, rep.ttft, rep.pipeline, rep.engine_stats
+        record[executor] = {
+            "p99_ms": s["p99_ms"], "avg_ms": s["avg_ms"],
+            "ttft_p99_ms": t["ttft_p99_ms"],
+            "ttft_avg_ms": t["ttft_avg_ms"],
+            "dispatches": es["dispatches"], "steps": es["batches"],
+            "dispatches_per_step": es["dispatches_per_batch"],
+            "decode_groups": pl["decode_groups"],
+            "mean_group_width": pl["mean_group_width"],
+            "max_group_width": pl["max_group_width"],
+            "sync_stall_s": pl["sync_stall_s"],
+            "arena_pages_peak": pl["arena_pages_peak"],
+        }
+        row(f"pipeline_{executor}", s["p99_ms"] * 1e3,
+            f"p99_ms={s['p99_ms']:.1f};ttft_p99_ms={t['ttft_p99_ms']:.1f}"
+            f";disp_per_step={es['dispatches_per_batch']:.2f}"
+            f";group_width={pl['mean_group_width']:.2f}"
+            f";stall_s={pl['sync_stall_s']:.3f}")
+    seq, pipe = record["sequential"], record["pipelined"]
+    record["dispatch_reduction"] = seq["dispatches"] / max(
+        pipe["dispatches"], 1)
+    record["p99_speedup"] = seq["p99_ms"] / max(pipe["p99_ms"], 1e-9)
+    path = write_bench_json("e2e_pipeline", record)
+    row("pipeline_summary", record["p99_speedup"],
+        f"dispatch_reduction={record['dispatch_reduction']:.2f}x"
+        f";p99_speedup={record['p99_speedup']:.2f}x;json={path}")
+
+
 def main():
     cfg = get_config("onerec-0.1b").reduced()
     gr = GRConfig(beam_width=16, top_k=16, num_decode_phases=3,
@@ -121,6 +176,7 @@ def main():
                 f";disp_per_batch={rep.engine_stats['dispatches_per_batch']:.0f}")
     mixed_prefill(cfg, gr, catalog, trie, params)
     beam_select_modes(cfg, gr, catalog, trie, params)
+    pipeline_executors(cfg, gr, catalog, trie, params)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,9 @@ Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
       [--policy token-capacity|edf|bucket-affinity|chunked]
       [--chunk-tokens 256]   (per-step budget of the chunked policy)
       [--beam-select dense|sparse]   (trie-gather beam expansion, DESIGN §7)
+      [--executor sequential|pipelined]   (chunked-step executor, DESIGN §8:
+                                  pipelined = batched same-phase decode over
+                                  the paged KV arena, one sync per step)
       [--baseline]   (PagedAttention-style pipeline instead of xGR)
 """
 
@@ -20,9 +23,10 @@ from repro.configs import get_config
 from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
-from repro.serving import (GREngine, ServingSystem, available_policies,
+from repro.serving import (ServingSystem, available_policies,
                            beam_pool_summary, engine_summary,
-                           latency_summary, ttft_summary)
+                           latency_summary, make_engine, pipeline_summary,
+                           ttft_summary)
 
 
 def main():
@@ -40,6 +44,11 @@ def main():
                     choices=["dense", "sparse"],
                     help="dense (R,BW,V)-mask vs sparse trie-gather "
                          "beam expansion (selection-identical)")
+    ap.add_argument("--executor", default="sequential",
+                    choices=["sequential", "pipelined"],
+                    help="chunked-step executor: pipelined fuses same-phase "
+                         "decodes into one batched dispatch over the paged "
+                         "KV arena (bit-identical results)")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -71,9 +80,10 @@ def main():
                        num_streams=spec.num_streams,
                        graph_dispatch=spec.backend == "graph",
                        prefill_chunk_tokens=args.chunk_tokens,
-                       beam_select=args.beam_select)
+                       beam_select=args.beam_select,
+                       executor=args.executor)
     spec = dataclasses.replace(spec, beam_select=args.beam_select)
-    engine = GREngine(cfg, gr, params, trie, scfg, spec=spec)
+    engine = make_engine(cfg, gr, params, trie, scfg, spec=spec)
 
     # --- the online request loop: submit -> step -> drain ------------------
     system = ServingSystem(engine, scfg)
@@ -104,6 +114,14 @@ def main():
     print(f"  beam pool  : {args.beam_select}, mean {bp['mean_pool']:.0f} / "
           f"max {bp['max_pool']} candidates per beam, "
           f"sort work saved {bp['saved_fraction']*100:.0f}%")
+    if args.policy == "chunked":
+        pl = pipeline_summary(engine.stats)
+        print(f"  executor   : {args.executor}, decode group width "
+              f"mean {pl['mean_group_width']:.2f} / "
+              f"max {pl['max_group_width']}, "
+              f"sync stall {pl['sync_stall_s']:.2f}s, "
+              f"arena peak {pl['arena_pages_peak']}/{pl['arena_pages']} "
+              f"pages ({pl['arena_util_peak'] * 100:.0f}% at peak)")
     r0 = results[0]
     if "batch_size" in r0.timing:
         shape = (f"in a {int(r0.timing['batch_size'])}-request batch "

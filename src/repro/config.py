@@ -259,6 +259,21 @@ class ServeConfig:
     #: beam-select override for the engine: "" keeps GRConfig.beam_select,
     #: "dense"/"sparse" force that path (see GRConfig.beam_select)
     beam_select: str = ""
+    #: step executor for continuous (chunked) serving (ISSUE 5):
+    #:   "sequential" — one blocked dispatch per StepPlan entry (reference)
+    #:   "pipelined"  — same-phase decode entries fuse into ONE batched
+    #:                  dispatch, prefill chunks stage through round-robin
+    #:                  input lanes, and the step syncs once at its end
+    #: (``repro.serving.make_engine`` interprets this; results are
+    #: bit-identical between the two)
+    executor: str = "sequential"
+    #: tokens per page of the shared-KV arena backing continuous serving
+    #: (0 = the arena default; keep it a divisor of the 64-token minimum
+    #: prompt bucket so spans are whole pages)
+    kv_page_tokens: int = 0
+    #: initial shared-KV arena pages (0 = small auto default; the arena
+    #: grows on demand, preserving live pages)
+    kv_arena_pages: int = 0
 
 
 @dataclass(frozen=True)

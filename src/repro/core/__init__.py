@@ -7,10 +7,12 @@ generate loop used by the serving engine.
 
 from repro.core.gr_decode import GRDecoder
 from repro.core.item_trie import ItemTrie, MaskWorkspace
+from repro.core.kv_arena import KVArena, gather_pages, init_arena, page_slots
 from repro.core.kv_cache import (SeparatedCache, fork_and_append,
                                  init_separated_cache, make_inplace_plan,
                                  two_pass_schedule, write_prefill)
-from repro.core.xattention import (full_reference_attention,
+from repro.core.xattention import (arena_beam_attention,
+                                   full_reference_attention,
                                    paged_beam_attention,
                                    staged_beam_attention)
 from repro.core.xbeam import (BeamState, beam_step, host_beam_select,
@@ -19,8 +21,10 @@ from repro.core.xbeam import (BeamState, beam_step, host_beam_select,
 
 __all__ = [
     "GRDecoder", "ItemTrie", "MaskWorkspace", "SeparatedCache",
+    "KVArena", "gather_pages", "init_arena", "page_slots",
     "fork_and_append", "init_separated_cache", "make_inplace_plan",
-    "two_pass_schedule", "write_prefill", "full_reference_attention",
+    "two_pass_schedule", "write_prefill", "arena_beam_attention",
+    "full_reference_attention",
     "paged_beam_attention", "staged_beam_attention", "BeamState",
     "beam_step", "host_beam_select", "init_beam_state", "naive_beam_select",
     "sparse_beam_step",

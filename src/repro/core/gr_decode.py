@@ -36,6 +36,7 @@ import numpy as np
 from repro.config import GRConfig, ModelConfig
 from repro.core import xbeam
 from repro.core.item_trie import ItemTrie, MaskWorkspace
+from repro.core.kv_arena import gather_pages, page_slots
 from repro.core.kv_cache import (SeparatedCache, chunk_slots,
                                  init_separated_cache, write_prefill,
                                  write_prefill_chunk)
@@ -98,29 +99,29 @@ class GRDecoder:
         return logits, sep
 
     # ----------------------------------------------------- staged prefill
-    def prefill_chunk(self, params, tokens: jax.Array, offsets: jax.Array,
-                      lengths: jax.Array, cache: SeparatedCache
-                      ) -> Tuple[jax.Array, SeparatedCache]:
-        """One staged-prefill chunk (paper §5 unified prefill/decode).
+    def _chunk_forward(self, params, tokens: jax.Array, offsets: jax.Array,
+                       lengths: jax.Array, S: int, kv_xs: tuple,
+                       view, store) -> Tuple[jax.Array, tuple]:
+        """Shared staged-prefill chunk forward (paper §5).
 
-        tokens  : (R, C) chunk tokens, right-padded
-        offsets : (R,) absolute start position of each request's chunk —
-                  must equal the request's current ``shared_len``
-        lengths : (R,) valid tokens in this chunk (0 = request not scheduled
-                  this step; its cache passes through untouched)
-        cache   : separated cache holding every previously-written chunk
+        The contiguous (``prefill_chunk``) and arena-paged
+        (``prefill_chunk_paged``) variants run the SAME transformer block;
+        they differ only in where the prior shared KV lives and where this
+        chunk's KV is written, abstracted here as two per-layer callbacks
+        over the scanned KV store ``kv_xs``:
+
+          view(kv)        -> contiguous (R, S, kvH, hd) k/v for attention
+          store(kv, k, v) -> this layer's scan output (collected KV, or the
+                             updated physical store)
 
         Each chunk query attends causally over the already-installed shared
         KV (positions < offset) plus the earlier positions of its own chunk
         — exactly the rows a monolithic prefill's causal mask exposes, so
         the result is equivalent position-by-position (the equivalence
-        property test locks this down).  Returns (logits (R, V) at each
-        request's last valid chunk position — meaningful only on its final
-        chunk — and the cache with this chunk's KV installed and
-        ``shared_len`` advanced to ``offsets + lengths``)."""
+        property tests lock this down).  Returns (logits (R, V) at each
+        request's last valid chunk position, per-layer scan outputs)."""
         cfg = self.cfg
         R, C = tokens.shape
-        S = cache.shared_k.shape[2]
         x = params["embed"][tokens]                          # (R, C, d)
         hd = cfg.resolved_head_dim
         rot = int(hd * cfg.rope_fraction) & ~1
@@ -136,12 +137,13 @@ class GRDecoder:
                )[:, None, None, :, :]                        # (R,1,1,C,S)
 
         def layer_body(h, xs):
-            lp, sk, sv = xs                                  # sk (R,S,kvH,hd)
+            lp, kv = xs[0], xs[1:]
             hn = apply_norm(lp["ln1"], h, cfg.norm_kind, cfg.norm_eps)
             q, k, v = gqa_qkv(lp["attn"], hn, cfg)
             if cfg.rope_kind == "rope":
                 q = apply_rope(q, cos, sin, cfg.rope_fraction)
                 k = apply_rope(k, cos, sin, cfg.rope_fraction)
+            sk, sv = view(kv)
             sk = sk.at[ridx, slot].set(k.astype(sk.dtype), mode="drop")
             sv = sv.at[ridx, slot].set(v.astype(sv.dtype), mode="drop")
             a = mha(q, sk, sv, vis, scale)
@@ -149,17 +151,113 @@ class GRDecoder:
             h = h + apply_mlp(lp["mlp"],
                               apply_norm(lp["ln2"], h, cfg.norm_kind,
                                          cfg.norm_eps), cfg.act_kind)
-            return h, (k, v)
+            return h, store(kv, k, v)
 
-        x, (ks, vs) = jax.lax.scan(
-            layer_body, x,
-            (params["dense_layers"], cache.shared_k, cache.shared_v))
-        new_cache = write_prefill_chunk(cache, ks, vs, offsets, lengths)
+        x, ys = jax.lax.scan(layer_body, x,
+                             (params["dense_layers"],) + kv_xs)
         x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
         last = jnp.maximum(lengths - 1, 0)                   # len-0 guard
         x_last = x[jnp.arange(R), last]
         logits = self.model._logits(params, x_last).astype(jnp.float32)
+        return logits, ys
+
+    def prefill_chunk(self, params, tokens: jax.Array, offsets: jax.Array,
+                      lengths: jax.Array, cache: SeparatedCache
+                      ) -> Tuple[jax.Array, SeparatedCache]:
+        """One staged-prefill chunk (paper §5 unified prefill/decode).
+
+        tokens  : (R, C) chunk tokens, right-padded
+        offsets : (R,) absolute start position of each request's chunk —
+                  must equal the request's current ``shared_len``
+        lengths : (R,) valid tokens in this chunk (0 = request not scheduled
+                  this step; its cache passes through untouched)
+        cache   : separated cache holding every previously-written chunk
+
+        Returns (logits (R, V) at each request's last valid chunk position
+        — meaningful only on its final chunk — and the cache with this
+        chunk's KV installed and ``shared_len`` advanced to
+        ``offsets + lengths``).  See :meth:`_chunk_forward`."""
+        S = cache.shared_k.shape[2]
+        logits, (ks, vs) = self._chunk_forward(
+            params, tokens, offsets, lengths, S,
+            (cache.shared_k, cache.shared_v),
+            view=lambda kv: kv,                  # xs ARE the contiguous view
+            store=lambda kv, k, v: (k, v))       # collect chunk KV as ys
+        new_cache = write_prefill_chunk(cache, ks, vs, offsets, lengths)
         return logits, new_cache
+
+    # ------------------------------------------------ arena-paged variants
+    # Same computation as prefill_chunk / beam_phase, but the shared KV
+    # lives in a paged arena (core/kv_arena.py): prior KV is read THROUGH
+    # per-request page tables and chunk KV is scattered into the owning
+    # request's pages.  The gather is a pure permutation of the same float
+    # values and padding keys are masked to exact-zero contributions, so
+    # both variants are bit-identical to the contiguous-cache path
+    # (tests/test_pipelined.py).
+
+    def prefill_chunk_paged(self, params, tokens: jax.Array,
+                            offsets: jax.Array, lengths: jax.Array,
+                            pages_k: jax.Array, pages_v: jax.Array,
+                            table: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """One staged-prefill chunk over the paged shared-KV arena.
+
+        tokens    : (R, C) chunk tokens, right-padded
+        offsets   : (R,) absolute start position of each request's chunk
+        lengths   : (R,) valid tokens in this chunk (0 = request skipped)
+        pages_k/v : (L, P, pg, kvH, hd) physical page pool
+        table     : (R, MP) int32 page tables (OOB sentinel for unmapped)
+
+        Returns (logits (R, V) at each request's last valid chunk position,
+        new_pages_k, new_pages_v) — the pool with this chunk's KV scattered
+        into the owning requests' pages.  Same transformer block as
+        :meth:`prefill_chunk` (see :meth:`_chunk_forward`); only the KV
+        view (page-table gather) and the write target (physical pages,
+        stale contents masked) differ."""
+        P, pg = pages_k.shape[1], pages_k.shape[2]
+        MP = table.shape[1]
+        S = MP * pg
+        pid, pslot = page_slots(table, offsets, lengths,
+                                tokens.shape[1], pg, P)
+        ptbl = jnp.where(table < P, table, 0)                # gather indices
+
+        def view(kv):
+            pk, pv = kv                                      # (P,pg,kvH,hd)
+            return (pk[ptbl].reshape(-1, S, *pk.shape[2:]),
+                    pv[ptbl].reshape(-1, S, *pv.shape[2:]))
+
+        def store(kv, k, v):
+            pk, pv = kv
+            return (pk.at[pid, pslot].set(k.astype(pk.dtype), mode="drop"),
+                    pv.at[pid, pslot].set(v.astype(pv.dtype), mode="drop"))
+
+        logits, (nk, nv) = self._chunk_forward(
+            params, tokens, offsets, lengths, S, (pages_k, pages_v),
+            view=view, store=store)
+        return logits, nk, nv
+
+    def beam_phase_paged(self, params, state: xbeam.BeamState,
+                         parent: jax.Array, unshared_k: jax.Array,
+                         unshared_v: jax.Array, pages_k: jax.Array,
+                         pages_v: jax.Array, table: jax.Array,
+                         shared_len: jax.Array, d: int
+                         ) -> Tuple[xbeam.BeamState, jax.Array,
+                                    jax.Array, jax.Array]:
+        """Decode phase ``d`` attending through page tables.
+
+        The batched group's shared KV is gathered from the arena into the
+        contiguous view a :class:`SeparatedCache` holds, then the ordinary
+        :meth:`beam_phase` runs — one dispatch for the whole same-phase
+        group.  Returns (state, parent, unshared_k, unshared_v)."""
+        cache = SeparatedCache(
+            shared_k=gather_pages(pages_k, table),
+            shared_v=gather_pages(pages_v, table),
+            shared_len=shared_len,
+            unshared_k=unshared_k, unshared_v=unshared_v,
+            step=jnp.int32(d - 1))
+        state, parent, cache = self.beam_phase(params, state, parent,
+                                               cache, d)
+        return state, parent, cache.unshared_k, cache.unshared_v
 
     # -------------------------------------------------------- decode phase
     def _attend(self, q, sk, sv, slen, uk, uv, dstep):

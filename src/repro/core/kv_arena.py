@@ -1,0 +1,253 @@
+"""Paged shared-KV arena (ISSUE 5 tentpole).
+
+One device-resident block pool holds the prefill (shared) KV of EVERY
+in-flight request, replacing the per-request contiguous caches the chunked
+engine used to allocate.  The pool is a pair of page arrays
+
+    pages_k / pages_v : (L, P, page_tokens, kvH, hd)
+
+and each request owns an ordered list of physical page ids — its **page
+table** — covering its bucketed prompt span.  Prefill chunks scatter their
+KV into the owning request's pages; decode gathers the pages back into a
+contiguous ``(R, S, kvH, hd)`` view through the page table and attends over
+it with the unmodified staged/paged/kernel attention — a pure permutation of
+the same values, so the paged path is **bit-identical** to the contiguous
+one (locked down by tests/test_pipelined.py).
+
+Host-side accounting lives in :class:`KVArena`: a free-list allocator with
+``alloc``/``free``/``release`` and occupancy/fragmentation stats.  Freed
+pages return to the pool and are handed out again in any order — the page
+table indirection is exactly what makes a fragmented (non-contiguous) span
+serve attention correctly.  When the pool is exhausted the arena *grows*
+(the device arrays are extended, existing page contents preserved); growth
+changes the pool shape, so engine programs key their compile cache on
+``num_pages``.
+
+Unmapped page-table slots use the sentinel ``arena.num_pages`` (one past the
+last physical page): scatters with ``mode="drop"`` discard writes through
+it, and :func:`gather_pages` redirects it to page 0 — whose stale contents
+are inert because every consumer masks keys at or beyond ``shared_len``
+(an exact zero contribution under the NEG_INF masking convention, see
+``core/xattention.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import GRConfig, ModelConfig
+
+#: default tokens per page — equal to the scheduler's ``min_bucket`` so a
+#: bucketed prompt span is always a whole number of pages
+DEFAULT_PAGE_TOKENS = 64
+
+
+# ---------------------------------------------------------------------------
+# Device-side page-table access (jittable)
+# ---------------------------------------------------------------------------
+
+def gather_pages(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """Contiguous shared-KV view of ``table``'s pages.
+
+    pages : (L, P, pg, kvH, hd) physical page pool
+    table : (R, MP) int32 page table; entries >= P are unmapped (their slots
+            read page 0 — callers mask by ``shared_len`` so the values are
+            inert)
+    returns (L, R, MP*pg, kvH, hd) — request r's logical token ``t`` sits at
+    position ``t`` of the view, exactly where a contiguous cache stores it.
+    """
+    L, P, pg = pages.shape[:3]
+    R, MP = table.shape
+    pt = jnp.where(table < P, table, 0)
+    g = pages[:, pt]                                 # (L, R, MP, pg, kvH, hd)
+    return g.reshape(L, R, MP * pg, *pages.shape[3:])
+
+
+def page_slots(table: jax.Array, offsets: jax.Array, lengths: jax.Array,
+               chunk: int, page_tokens: int, num_pages: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Physical (page, slot) coordinates for one prefill chunk's tokens.
+
+    Chunk position ``i`` of request ``r`` is logical token
+    ``offsets[r] + i``, i.e. slot ``(offsets[r]+i) % page_tokens`` of page
+    ``table[r, (offsets[r]+i) // page_tokens]``.  Positions past
+    ``lengths[r]`` (right padding) or beyond the request's mapped span
+    return page id ``num_pages`` — out of bounds, so scatters with
+    ``mode="drop"`` discard them instead of clobbering live pages.
+
+    Returns (page_idx, slot_idx), each (R, chunk) int32.
+    """
+    MP = table.shape[1]
+    pos = offsets[:, None] + jnp.arange(chunk)[None, :]      # (R, C) logical
+    valid = jnp.arange(chunk)[None, :] < lengths[:, None]
+    logical = pos // page_tokens
+    pid = jnp.take_along_axis(table, jnp.clip(logical, 0, MP - 1), axis=1)
+    pid = jnp.where(valid & (logical < MP) & (pid < num_pages),
+                    pid, num_pages)
+    slot = pos % page_tokens
+    return pid.astype(jnp.int32), slot.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ArenaStats:
+    allocs: int = 0
+    frees: int = 0
+    grows: int = 0
+    pages_peak: int = 0            # max pages simultaneously in use
+    #: max of used/total AT THE TIME — dividing pages_peak by the current
+    #: pool size would retroactively halve the ratio after every growth,
+    #: hiding exactly the saturation events that forced the growth
+    util_peak: float = 0.0
+
+
+class KVArena:
+    """Paged shared-KV block pool with per-request page tables.
+
+    The device arrays are plain (non-donated) jax buffers the serving engine
+    threads functionally through its jitted programs; the arena re-adopts
+    the updated pool via :meth:`commit_pages`.  All *accounting* (free list,
+    page tables, occupancy) is host-side and exact.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_pages: int = 16,
+                 page_tokens: int = DEFAULT_PAGE_TOKENS,
+                 dtype=jnp.float32):
+        if num_pages < 1 or page_tokens < 1:
+            raise ValueError("arena needs >= 1 page of >= 1 token")
+        L = cfg.num_layers
+        kvH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        self.page_tokens = int(page_tokens)
+        self._dtype = dtype
+        self.pages_k = jnp.zeros((L, num_pages, page_tokens, kvH, hd), dtype)
+        self.pages_v = jnp.zeros((L, num_pages, page_tokens, kvH, hd), dtype)
+        # LIFO free list: lowest ids handed out first on a fresh arena,
+        # most-recently-freed first afterwards (cache-friendly reuse)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._tables: Dict[int, np.ndarray] = {}
+        self.stats = ArenaStats()
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def num_pages(self) -> int:
+        return self.pages_k.shape[1]
+
+    @property
+    def oob_page(self) -> int:
+        """Sentinel page id for unmapped table slots (== num_pages)."""
+        return self.num_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 1) // self.page_tokens)
+
+    # ---------------------------------------------------------- accounting
+    @property
+    def pages_used(self) -> int:
+        return sum(len(t) for t in self._tables.values())
+
+    def in_use(self, rid: int) -> bool:
+        return rid in self._tables
+
+    def rids(self):
+        """Rids currently holding pages (snapshot list)."""
+        return list(self._tables)
+
+    def span(self, rid: int) -> int:
+        """Tokens covered by ``rid``'s mapped pages."""
+        return len(self._tables[rid]) * self.page_tokens
+
+    def occupancy(self) -> Dict[str, float]:
+        total = self.num_pages
+        used = self.pages_used
+        return {"pages_total": total, "pages_used": used,
+                "pages_free": len(self._free),
+                "utilization": used / total if total else 0.0,
+                "pages_peak": self.stats.pages_peak,
+                "util_peak": self.stats.util_peak,
+                "requests": len(self._tables)}
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self, rid: int, n_tokens: int) -> np.ndarray:
+        """Map ``n_tokens`` worth of pages to ``rid``; returns its page
+        table (int32 physical page ids, logical order).  Grows the pool when
+        the free list cannot satisfy the request."""
+        if rid in self._tables:
+            raise ValueError(f"rid {rid} already holds arena pages")
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            self._grow(need - len(self._free))
+        table = np.asarray([self._free.pop() for _ in range(need)], np.int32)
+        self._tables[rid] = table
+        self.stats.allocs += 1
+        self.stats.pages_peak = max(self.stats.pages_peak, self.pages_used)
+        self.stats.util_peak = max(self.stats.util_peak,
+                                   self.pages_used / self.num_pages)
+        return table.copy()
+
+    def free(self, rid: int) -> int:
+        """Return ``rid``'s pages to the pool; raises KeyError if absent."""
+        table = self._tables.pop(rid)
+        self._free.extend(int(p) for p in reversed(table))
+        self.stats.frees += 1
+        return len(table)
+
+    def release(self, rid: int) -> int:
+        """Tolerant :meth:`free`: 0 when ``rid`` holds nothing."""
+        if rid not in self._tables:
+            return 0
+        return self.free(rid)
+
+    def table(self, rid: int, width: int = 0) -> np.ndarray:
+        """``rid``'s page table, right-padded with the OOB sentinel to
+        ``width`` slots (>= its own length)."""
+        t = self._tables[rid]
+        width = max(width, len(t))
+        out = np.full((width,), self.oob_page, np.int32)
+        out[:len(t)] = t
+        return out
+
+    # ------------------------------------------------------------- device
+    def commit_pages(self, pages_k: jax.Array, pages_v: jax.Array) -> None:
+        """Adopt the updated pool returned by a jitted program."""
+        assert pages_k.shape == self.pages_k.shape, \
+            f"pool shape changed: {pages_k.shape} != {self.pages_k.shape}"
+        self.pages_k = pages_k
+        self.pages_v = pages_v
+
+    def _grow(self, min_extra: int) -> None:
+        """Extend the pool, preserving every existing page's contents.
+
+        Doubles capacity (at least ``min_extra`` new pages), appends the new
+        page ids to the free list, and leaves all existing tables valid —
+        the sentinel moves with ``num_pages``, so page tables handed to
+        device programs must be rebuilt via :meth:`table` (the engine builds
+        them per dispatch)."""
+        old = self.num_pages
+        extra = max(old, min_extra)
+        pad = [(0, 0)] * self.pages_k.ndim
+        pad[1] = (0, extra)
+        self.pages_k = jnp.pad(self.pages_k, pad)
+        self.pages_v = jnp.pad(self.pages_v, pad)
+        self._free[:0] = list(range(old + extra - 1, old - 1, -1))
+        self.stats.grows += 1
+
+
+def init_arena(cfg: ModelConfig, gr: GRConfig, serve_cfg,
+               dtype=jnp.float32) -> KVArena:
+    """Arena sized from :class:`~repro.config.ServeConfig`:
+    ``kv_page_tokens`` tokens per page and ``kv_arena_pages`` initial pages
+    (0 = small auto default; the arena grows on demand)."""
+    page_tokens = getattr(serve_cfg, "kv_page_tokens", 0) \
+        or DEFAULT_PAGE_TOKENS
+    pages = getattr(serve_cfg, "kv_arena_pages", 0) \
+        or max(16, getattr(serve_cfg, "max_batch_requests", 8))
+    return KVArena(cfg, num_pages=pages, page_tokens=page_tokens,
+                   dtype=dtype)

@@ -103,6 +103,36 @@ def staged_beam_attention(q: jax.Array,
     return jnp.moveaxis(out, 3, 1).reshape(R, BW, H, hd).astype(q.dtype)
 
 
+def arena_beam_attention(q: jax.Array,
+                         pages_k: jax.Array, pages_v: jax.Array,
+                         table: jax.Array, shared_len: jax.Array,
+                         unshared_k: jax.Array, unshared_v: jax.Array,
+                         step: jax.Array,
+                         scale: float | None = None) -> jax.Array:
+    """xAttention decode step reading the shared stage THROUGH a paged
+    KV arena (ISSUE 5): the per-request page table is gathered back into
+    the contiguous ``(R, S, kvH, hd)`` view and fed to
+    :func:`staged_beam_attention`.
+
+    pages_k/v : (P, pg, kvH, hd) single-layer physical page pool
+    table     : (R, MP) int32 page table; entries >= P are unmapped and
+                read page 0 — inert, because ``shared_len`` masks every
+                slot at or beyond the written frontier to an exact-zero
+                contribution (NEG_INF -> exp underflows to 0.0)
+
+    The gather (one :func:`~repro.core.kv_arena.gather_pages` — the same
+    primitive the engine's decode programs use) is a pure permutation of
+    the same float values, so the result is **bit-identical** to running
+    the staged path over the request's contiguous cache
+    (tests/test_kv_arena.py locks this down).
+    """
+    from repro.core.kv_arena import gather_pages
+    sk = gather_pages(pages_k[None], table)[0]
+    sv = gather_pages(pages_v[None], table)[0]
+    return staged_beam_attention(q, sk, sv, shared_len,
+                                 unshared_k, unshared_v, step, scale)
+
+
 def full_reference_attention(q, shared_k, shared_v, shared_len,
                              unshared_k, unshared_v, step,
                              scale: float | None = None) -> jax.Array:

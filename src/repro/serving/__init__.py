@@ -1,9 +1,11 @@
 from repro.serving.api import RequestHandle, ServeResult, ServingSystem
 from repro.serving.engine import GREngine, EngineStats
 from repro.serving.metrics import (beam_pool_summary, engine_summary,
-                                   latency_summary, percentile, ttft_summary)
+                                   latency_summary, percentile,
+                                   pipeline_summary, ttft_summary)
+from repro.serving.pipeline import PipelinedEngine, make_engine
 from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
-                                   StepPlan)
+                                   StepPlan, group_decode_entries)
 from repro.serving.scheduler import (BucketAffinityBatcher,
                                      ChunkedPrefillScheduler, EDFBatcher,
                                      SchedulerPolicy, TokenCapacityBatcher,
@@ -12,10 +14,11 @@ from repro.serving.scheduler import (BucketAffinityBatcher,
 from repro.serving.server import ServerReport, run_server
 
 __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
-           "GREngine", "EngineStats",
+           "GREngine", "EngineStats", "PipelinedEngine", "make_engine",
            "latency_summary", "engine_summary", "percentile", "ttft_summary",
-           "beam_pool_summary",
+           "beam_pool_summary", "pipeline_summary",
            "BatchPlan", "RequestState", "Phase", "StepEntry", "StepPlan",
+           "group_decode_entries",
            "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",
            "BucketAffinityBatcher", "ChunkedPrefillScheduler",
            "available_policies", "make_policy",

@@ -94,9 +94,18 @@ class RequestHandle:
     def done(self) -> bool:
         return self._state.finish_s is not None
 
+    def aborted(self) -> bool:
+        """True once :meth:`ServingSystem.abort` withdrew this request —
+        it will never complete and :meth:`result` raises."""
+        return self.rid in self._system._aborted
+
     def result(self) -> ServeResult:
         """The :class:`ServeResult`; raises if the request has not finished
-        (call ``step``/``drain`` first — the clock only moves when told)."""
+        (call ``step``/``drain`` first — the clock only moves when told) or
+        was aborted."""
+        if self.aborted():
+            raise RuntimeError(f"request {self.rid} was aborted; it has no "
+                               f"result and will never complete")
         if not self.done():
             raise RuntimeError(
                 f"request {self.rid} not finished; advance the clock with "
@@ -104,7 +113,8 @@ class RequestHandle:
         return self._system._results[self.rid]
 
     def __repr__(self):
-        return f"RequestHandle(rid={self.rid}, done={self.done()})"
+        return (f"RequestHandle(rid={self.rid}, done={self.done()}, "
+                f"aborted={self.aborted()})")
 
 
 class ServingSystem:
@@ -130,6 +140,7 @@ class ServingSystem:
         self._now = 0.0
         self._next_rid = 0
         self._rids: set = set()
+        self._aborted: set = set()
         self._results: Dict[int, ServeResult] = {}
         self.completed: List[RequestState] = []
         # continuous (chunked) policies plan engine *steps* instead of
@@ -224,6 +235,7 @@ class ServingSystem:
         if self._continuous:
             newly = self._run_steps(until=None)     # run to completion
             self._now = max(self._now, self._busy_until)
+            self._release_orphans()
             return newly
         newly: List[ServeResult] = []
         while len(self.policy):
@@ -235,6 +247,42 @@ class ServingSystem:
             self._now = t
             newly.extend(self._dispatch(plan, t))
         return newly
+
+    def abort(self, rid: int) -> bool:
+        """Withdraw a submitted-but-unfinished request: drop it from the
+        scheduler (via the policy's optional ``remove(rid)`` — every shipped
+        policy implements it) and, on success, release any engine-side
+        state it holds (continuous runtime + KV-arena pages).  Returns True
+        if the request was withdrawn; its handle then reports
+        ``aborted()``.  Finished requests are untouched (their result stays
+        available), and a request the policy does not know is left alone —
+        drain's orphan sweep reclaims engine state in that case, and engine
+        state is never freed while the policy could still schedule the
+        request."""
+        if rid in self._results:
+            return False
+        remove = getattr(self.policy, "remove", None)
+        removed = bool(remove(rid)) if remove is not None else False
+        if removed:
+            self._aborted.add(rid)
+            if hasattr(self.engine, "release"):
+                self.engine.release(rid)
+        return removed
+
+    def _release_orphans(self) -> None:
+        """Free engine-side state of requests that never completed (aborted
+        mid-flight, or left behind by a policy that lost track of them) —
+        the ``GREngine._runtimes`` / arena-page leak fix (ISSUE 5).  Swept
+        rids are marked aborted so their handles report the truth instead
+        of an eternal not-finished limbo."""
+        release = getattr(self.engine, "release", None)
+        active = getattr(self.engine, "active_rids", None)
+        if release is None or active is None:
+            return
+        for rid in list(active()):
+            if rid not in self._results:
+                release(rid)
+                self._aborted.add(rid)
 
     # ----------------------------------------------- continuous step loop
     def _run_steps(self, until: Optional[float]) -> List[ServeResult]:

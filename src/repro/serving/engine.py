@@ -19,6 +19,14 @@ Workers are the jitted executables themselves (one per padded shape bucket);
 each backend keeps a shape->executable table so steady-state traffic never
 recompiles.  This module is the only place a dispatch-mode choice is made —
 no caller branches on ``graph_dispatch``.
+
+Continuous (chunked) serving state lives in a **paged shared-KV arena**
+(ISSUE 5, ``core/kv_arena.py``): one device-resident block pool holds every
+in-flight request's prefill KV behind per-request page tables.  This class
+drives the reference ``executor="sequential"`` step loop (one blocked
+dispatch per StepPlan entry); :class:`~repro.serving.pipeline.PipelinedEngine`
+overrides :meth:`run_step` with batched same-phase decode dispatch and
+non-blocking execution over the same arena and programs.
 """
 
 from __future__ import annotations
@@ -34,7 +42,7 @@ import numpy as np
 from repro.config import EngineSpec, GRConfig, ModelConfig, ServeConfig
 from repro.core.gr_decode import ExecutionBackend, GRDecoder, make_backend
 from repro.core.item_trie import ItemTrie
-from repro.core.kv_cache import init_separated_cache
+from repro.core.kv_arena import KVArena, init_arena
 from repro.serving.request import BatchPlan, StepPlan
 from repro.serving.scheduler import bucket_len
 
@@ -56,15 +64,32 @@ class EngineStats:
     beam_pool_sum: int = 0
     beam_pool_max: int = 0
     beam_pool_dense_sum: int = 0    # the V-wide pool the dense path scans
+    # --- pipelined step executor / KV arena accounting (ISSUE 5):
+    # one decode "group" = one dispatch covering every same-phase decode
+    # entry of a step (width == 1 on the sequential executor by definition)
+    decode_groups: int = 0
+    decode_group_width_sum: int = 0
+    decode_group_width_max: int = 0
+    sync_stall_s: float = 0.0       # time blocked in end-of-step barriers
+    arena_pages: int = 0            # current pool size (gauge)
+    arena_pages_peak: int = 0       # peak pages simultaneously in use
+    arena_util_peak: float = 0.0    # peak used/total, measured at the peak
 
 
 @dataclasses.dataclass
 class _ChunkRuntime:
-    """Per-request device state for continuous (chunked) serving."""
+    """Per-request state for continuous (chunked) serving.
 
-    cache: object                   # SeparatedCache, R == 1
+    The shared (prompt) KV lives in the engine's :class:`KVArena` behind
+    ``table``; only the tiny unshared (beam) cache and the beam-search
+    state are per-request device arrays."""
+
+    table: np.ndarray               # physical page ids, logical order
+    shared_len: int = 0             # prompt tokens written so far (host)
     state: object = None            # xbeam.BeamState after beam phase 0
     parent: object = None           # (1, BW) fork indices
+    unshared_k: object = None       # (L, 1, BW, ND, kvH, hd)
+    unshared_v: object = None
 
 
 class GREngine:
@@ -96,11 +121,19 @@ class GREngine:
         self.stats = EngineStats()
         # --- continuous (chunked) serving state ---------------------------
         self.min_bucket = 64
+        self.arena: Optional[KVArena] = None        # lazy (first admit)
         self._runtimes: Dict[int, _ChunkRuntime] = {}
-        self._warm: set = set()
-        self._jit_chunk = jax.jit(self.decoder.prefill_chunk)
+        self._compiled: Dict[tuple, object] = {}    # shape key -> executable
+        # The chunk program rewrites the page pool functionally.  On this
+        # sequential reference path every dispatch is fully blocked, so
+        # donating the pool buffers is safe and lets XLA alias input to
+        # output: the scatter is in-place instead of an O(total-pool) copy
+        # per chunk.  (PipelinedEngine re-jits WITHOUT donation — see its
+        # __init__ for the measured reason.)
+        self._jit_chunk = jax.jit(self.decoder.prefill_chunk_paged,
+                                  donate_argnames=("pages_k", "pages_v"))
         self._jit_phase0 = jax.jit(self.decoder.beam_phase0)
-        self._jit_phase = jax.jit(self.decoder.beam_phase,
+        self._jit_phase = jax.jit(self.decoder.beam_phase_paged,
                                   static_argnames=("d",))
 
     # ---------------------------------------------------------------- utils
@@ -149,42 +182,106 @@ class GREngine:
         return timing
 
     # ------------------------------------------- continuous (chunked) steps
-    def _timed_call(self, key: tuple, fn, *args, **kw):
-        """Run a jitted call; first use per shape key warms the compile so
-        steady-state step timing stays compile-free (same discipline as the
-        batch backends).  All step programs are functional, so the warmup
-        call is a safe re-execution."""
+    def _aot(self, key: tuple, fn, *args, **static):
+        """AOT-compiled executable for ``fn`` at this shape key.
+
+        First use per key lowers + compiles WITHOUT executing (the old
+        warmup ran the program once just to populate the jit cache —
+        double-executing the device work; ``.lower(...).compile()`` measures
+        compile time alone).  Returns (executable, compile_s)."""
+        compiled = self._compiled.get(key)
         compile_s = 0.0
-        if key not in self._warm:
+        if compiled is None:
             t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args, **kw))
+            compiled = fn.lower(*args, **static).compile()
             compile_s = time.perf_counter() - t0
-            self._warm.add(key)
+            self._compiled[key] = compiled
+        return compiled, compile_s
+
+    def _timed_call(self, key: tuple, fn, *args, **static):
+        """Run an AOT-compiled call, blocked; returns (out, seconds,
+        compile_s) with steady-state timing compile-free."""
+        compiled, compile_s = self._aot(key, fn, *args, **static)
         t0 = time.perf_counter()
-        out = fn(*args, **kw)
+        out = compiled(*args)
         jax.block_until_ready(out)
         return out, time.perf_counter() - t0, compile_s
+
+    def _ensure_arena(self) -> KVArena:
+        if self.arena is None:
+            self.arena = init_arena(self.cfg, self.gr, self.serve_cfg)
+        return self.arena
 
     def _runtime(self, req) -> _ChunkRuntime:
         rt = self._runtimes.get(req.rid)
         if rt is None:
+            arena = self._ensure_arena()
             s_max = bucket_len(req.prompt_len, self.min_bucket)
-            rt = _ChunkRuntime(cache=init_separated_cache(
-                self.cfg, self.gr, 1, s_max))
+            table = arena.alloc(req.rid, s_max)
+            cfg, gr = self.cfg, self.gr
+            ushape = (cfg.num_layers, 1, gr.beam_width,
+                      gr.num_decode_phases, cfg.num_kv_heads,
+                      cfg.resolved_head_dim)
+            rt = _ChunkRuntime(table=table,
+                               unshared_k=jnp.zeros(ushape, jnp.float32),
+                               unshared_v=jnp.zeros(ushape, jnp.float32))
             self._runtimes[req.rid] = rt
+            self._note_arena()
         return rt
+
+    def _note_arena(self) -> None:
+        if self.arena is None:
+            return
+        P = self.arena.num_pages
+        if self.stats.arena_pages and P != self.stats.arena_pages:
+            # the arena grew: programs compiled against the old pool shape
+            # can never be hit again (the pool only grows), so drop them —
+            # pool-shaped keys carry num_pages as their last element
+            self._compiled = {
+                k: v for k, v in self._compiled.items()
+                if k[0] not in ("chunk", "phase", "phase-group")
+                or k[-1] == P}
+        self.stats.arena_pages = P
+        self.stats.arena_pages_peak = self.arena.stats.pages_peak
+        self.stats.arena_util_peak = self.arena.stats.util_peak
+
+    def release(self, rid: int) -> bool:
+        """Free a request's engine-side state: its runtime AND its arena
+        pages.  Safe to call for unknown or already-finished rids — this is
+        the drain/abort path for requests that never reach their final
+        decode phase (the pre-arena engine leaked their caches forever)."""
+        rt = self._runtimes.pop(rid, None)
+        freed = self.arena.release(rid) if self.arena is not None else 0
+        self._note_arena()
+        return rt is not None or freed > 0
+
+    def active_rids(self):
+        """Rids currently holding engine-side state (runtime or pages)."""
+        rids = set(self._runtimes)
+        if self.arena is not None:
+            rids.update(self.arena.rids())
+        return rids
 
     def _finalize(self, req, rt: _ChunkRuntime):
         req.items = np.asarray(rt.state.tokens[0])
         req.log_probs = np.asarray(rt.state.log_probs[0])
-        self._runtimes.pop(req.rid, None)
+        self.release(req.rid)
         self.stats.requests += 1
+
+    def _stage_chunk(self, e) -> Tuple[np.ndarray, int]:
+        """Pad one prefill chunk's tokens to its shape bucket."""
+        cb = bucket_len(max(e.chunk_len, 1), min_bucket=16)
+        toks = np.zeros((1, cb), np.int32)
+        toks[0, :e.chunk_len] = e.req.tokens[e.offset:e.offset + e.chunk_len]
+        return toks, cb
 
     def run_step(self, plan: StepPlan) -> Dict[str, float]:
         """Execute one mixed prefill/decode step (numerics only — phase
-        bookkeeping is the scheduler's ``commit``).  Per-request device
-        state lives in ``_runtimes``; entries execute sequentially, so the
-        step's critical path is the sum of its sub-dispatches."""
+        bookkeeping is the scheduler's ``commit``).  Reference sequential
+        executor: entries run one blocked dispatch at a time, so the step's
+        critical path is the sum of its sub-dispatches
+        (:class:`~repro.serving.pipeline.PipelinedEngine` is the overlapped
+        alternative)."""
         nd = self.gr.num_decode_phases
         device_s = compile_s = 0.0
         dispatches = 0
@@ -192,15 +289,17 @@ class GREngine:
             r = e.req
             if e.kind == "prefill":
                 rt = self._runtime(r)
-                s_max = rt.cache.shared_k.shape[2]
-                cb = bucket_len(max(e.chunk_len, 1), min_bucket=16)
-                toks = np.zeros((1, cb), np.int32)
-                toks[0, :e.chunk_len] = \
-                    r.tokens[e.offset:e.offset + e.chunk_len]
-                (logits, rt.cache), dt, cs = self._timed_call(
-                    ("chunk", cb, s_max), self._jit_chunk, self.params,
-                    jnp.asarray(toks), jnp.asarray([e.offset], jnp.int32),
-                    jnp.asarray([e.chunk_len], jnp.int32), rt.cache)
+                arena = self.arena
+                toks, cb = self._stage_chunk(e)
+                MP = len(rt.table)
+                (logits, pk, pv), dt, cs = self._timed_call(
+                    ("chunk", cb, MP, arena.num_pages), self._jit_chunk,
+                    self.params, toks,
+                    np.asarray([e.offset], np.int32),
+                    np.asarray([e.chunk_len], np.int32),
+                    arena.pages_k, arena.pages_v, rt.table[None])
+                arena.commit_pages(pk, pv)
+                rt.shared_len = e.offset + e.chunk_len
                 device_s += dt
                 compile_s += cs
                 dispatches += 1
@@ -208,7 +307,7 @@ class GREngine:
                 self.stats.padded_tokens += cb
                 if e.last_chunk:
                     (rt.state, rt.parent), dt, cs = self._timed_call(
-                        ("phase0",), self._jit_phase0, logits)
+                        ("phase0", 1), self._jit_phase0, logits)
                     device_s += dt
                     compile_s += cs
                     dispatches += 1
@@ -217,22 +316,32 @@ class GREngine:
                         self._finalize(r, rt)
             else:
                 rt = self._runtimes[r.rid]
+                arena = self.arena
                 d = e.decode_phase
-                (rt.state, rt.parent, rt.cache), dt, cs = self._timed_call(
-                    ("phase", d, rt.cache.shared_k.shape[2]),
+                MP = len(rt.table)
+                out, dt, cs = self._timed_call(
+                    ("phase", d, 1, MP, arena.num_pages),
                     self._jit_phase, self.params, rt.state, rt.parent,
-                    rt.cache, d=d)
+                    rt.unshared_k, rt.unshared_v,
+                    arena.pages_k, arena.pages_v, rt.table[None],
+                    np.asarray([rt.shared_len], np.int32), d=d)
+                rt.state, rt.parent, rt.unshared_k, rt.unshared_v = out
                 device_s += dt
                 compile_s += cs
                 dispatches += 1
                 self._track_pool((d,))
                 self.stats.padded_tokens += self.gr.beam_width
+                self.stats.decode_groups += 1
+                self.stats.decode_group_width_sum += 1
+                self.stats.decode_group_width_max = max(
+                    self.stats.decode_group_width_max, 1)
                 if d == nd - 1:
                     self._finalize(r, rt)
         self.stats.batches += 1
         self.stats.dispatches += dispatches
         self.stats.device_s += device_s
         self.stats.compile_s += compile_s
+        self._note_arena()
         return {"device_s": device_s, "host_mask_s": 0.0,
                 "critical_s": device_s, "compile_s": compile_s,
                 "dispatches": dispatches}

@@ -45,6 +45,29 @@ def beam_pool_summary(stats) -> Dict[str, float]:
     }
 
 
+def pipeline_summary(stats) -> Dict[str, float]:
+    """Pipelined-executor / KV-arena stats (ISSUE 5).
+
+    One decode "group" = one dispatch covering every same-phase decode
+    entry of a step; ``mean_group_width`` is the realized cross-request
+    batching (1.0 on the sequential executor by definition).
+    ``sync_stall_s`` is time blocked in end-of-step barriers, and the arena
+    gauges report the paged shared-KV pool size / peak occupancy."""
+    g = stats.decode_groups
+    return {
+        "decode_groups": g,
+        "mean_group_width":
+            stats.decode_group_width_sum / g if g else float("nan"),
+        "max_group_width": int(stats.decode_group_width_max),
+        "sync_stall_s": stats.sync_stall_s,
+        "arena_pages": int(stats.arena_pages),
+        "arena_pages_peak": int(stats.arena_pages_peak),
+        # measured AT the peak, not against the current (possibly since-
+        # grown) pool — growth must not retroactively hide saturation
+        "arena_util_peak": stats.arena_util_peak,
+    }
+
+
 def latency_summary(latencies_s: Sequence[float],
                     duration_s: float) -> Dict[str, float]:
     arr = np.asarray(latencies_s, np.float64)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -108,6 +108,10 @@ class StepPlan:
     entries: List[StepEntry]
     formed_s: float
     token_cost: int                 # decode queries + chunk tokens packed
+    #: same-phase decode groups, annotated by the scheduler (ISSUE 5): the
+    #: pipelined executor runs each group as ONE batched dispatch.  None =
+    #: not annotated; :meth:`phase_groups` computes it on demand.
+    decode_groups: Optional[Dict[int, List[StepEntry]]] = None
 
     @property
     def size(self) -> int:
@@ -118,3 +122,19 @@ class StepPlan:
 
     def decodes(self) -> List[StepEntry]:
         return [e for e in self.entries if e.kind == "decode"]
+
+    def phase_groups(self) -> Dict[int, List[StepEntry]]:
+        """Decode entries grouped by phase, entry (FIFO) order preserved."""
+        if self.decode_groups is not None:
+            return self.decode_groups
+        return group_decode_entries(self.entries)
+
+
+def group_decode_entries(entries: List[StepEntry]
+                         ) -> Dict[int, List[StepEntry]]:
+    """Group a step's decode entries by decode phase (insertion-ordered)."""
+    groups: Dict[int, List[StepEntry]] = {}
+    for e in entries:
+        if e.kind == "decode":
+            groups.setdefault(e.decode_phase, []).append(e)
+    return groups

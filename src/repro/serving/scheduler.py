@@ -38,7 +38,7 @@ from typing import Callable, Deque, Dict, List, Optional, Protocol, \
 
 from repro.config import ServeConfig
 from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
-                                   StepPlan)
+                                   StepPlan, group_decode_entries)
 
 
 def bucket_len(n: int, min_bucket: int = 64) -> int:
@@ -73,6 +73,13 @@ class SchedulerPolicy(Protocol):
 
     def __len__(self) -> int:
         ...
+
+    # Policies may additionally implement ``remove(rid) -> bool`` (drop a
+    # queued/active request; every shipped policy does) — it is what
+    # ``ServingSystem.abort`` uses to withdraw a request.  It is not part
+    # of the runtime-checkable protocol so minimal third-party policies
+    # still satisfy ``isinstance``; without it, abort reports failure
+    # instead of guessing at queue internals.
 
 
 POLICIES: Dict[str, Callable[..., SchedulerPolicy]] = {}
@@ -128,6 +135,15 @@ class TokenCapacityBatcher:
         """Enqueue time of the longest-waiting request (queue non-empty).
         FIFO order makes it the head; reorder-on-add subclasses override."""
         return self.queue[0].enqueue_s
+
+    def remove(self, rid: int) -> bool:
+        """Drop a queued request (``ServingSystem.abort``)."""
+        kept = [r for r in self.queue if r.rid != rid]
+        if len(kept) == len(self.queue):
+            return False
+        self.queue.clear()
+        self.queue.extend(kept)
+        return True
 
     def next_deadline(self) -> Optional[float]:
         if not self.queue:
@@ -234,6 +250,16 @@ class BucketAffinityBatcher:
         return (self.buckets[b][0].enqueue_s
                 + self.cfg.batch_wait_quota_ms / 1e3)
 
+    def remove(self, rid: int) -> bool:
+        """Drop a queued request (``ServingSystem.abort``)."""
+        for q in self.buckets.values():
+            kept = [r for r in q if r.rid != rid]
+            if len(kept) != len(q):
+                q.clear()
+                q.extend(kept)
+                return True
+        return False
+
     def _cut(self, blen: int, now_s: float) -> BatchPlan:
         q = self.buckets[blen]
         cap = self._capacity(blen)
@@ -314,6 +340,13 @@ class ChunkedPrefillScheduler:
     def __len__(self):
         return len(self.waiting)
 
+    def remove(self, rid: int) -> bool:
+        """Drop a waiting or active request (``ServingSystem.abort``)."""
+        n = len(self.waiting) + len(self.active)
+        self.waiting = deque(r for r in self.waiting if r.rid != rid)
+        self.active = [r for r in self.active if r.rid != rid]
+        return len(self.waiting) + len(self.active) != n
+
     # ------------------------------------------------------ step planning
     def has_work(self) -> bool:
         return bool(self.waiting or self.active)
@@ -349,7 +382,7 @@ class ChunkedPrefillScheduler:
                 entries.append(StepEntry(req=r, kind="decode",
                                          decode_phase=r.decode_phase))
                 used += self.decode_cost
-            return StepPlan(entries=entries, formed_s=now_s, token_cost=used)
+            return self._plan(entries, now_s, used)
         if degenerate:
             self._decode_turn = True    # this step prefills; next decodes
         else:
@@ -375,7 +408,15 @@ class ChunkedPrefillScheduler:
             entries = [StepEntry(req=r, kind="decode",
                                  decode_phase=r.decode_phase)]
             used = self.decode_cost
-        return StepPlan(entries=entries, formed_s=now_s, token_cost=used)
+        return self._plan(entries, now_s, used)
+
+    @staticmethod
+    def _plan(entries: List[StepEntry], now_s: float, used: int) -> StepPlan:
+        """Cut the StepPlan, annotated with its same-phase decode groups —
+        each group is one batched dispatch for the pipelined executor
+        (ISSUE 5); the sequential executor ignores the annotation."""
+        return StepPlan(entries=entries, formed_s=now_s, token_cost=used,
+                        decode_groups=group_decode_entries(entries))
 
     def commit(self, plan: StepPlan):
         """Apply a planned step's phase transitions (host bookkeeping only —

@@ -29,7 +29,7 @@ from repro.config import ServeConfig
 from repro.serving.api import ServingSystem
 from repro.serving.engine import GREngine
 from repro.serving.metrics import beam_pool_summary, engine_summary, \
-    latency_summary, ttft_summary
+    latency_summary, pipeline_summary, ttft_summary
 from repro.serving.request import RequestState
 
 
@@ -46,6 +46,10 @@ class ServerReport:
     #: mean/max pool width per (request, phase) and the fraction of dense
     #: sort work saved (see metrics.beam_pool_summary)
     beam_pool: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: pipelined-executor / KV-arena summary (ISSUE 5): batched decode
+    #: group widths, end-of-step sync stall, arena occupancy
+    #: (see metrics.pipeline_summary)
+    pipeline: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def slo_violations(self) -> int:
@@ -72,4 +76,5 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
         slo_ms=serve_cfg.slo_ms,
         ttft=ttft_summary(ttft),
         beam_pool=beam_pool_summary(engine.stats),
+        pipeline=pipeline_summary(engine.stats),
     )

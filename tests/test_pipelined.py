@@ -1,0 +1,317 @@
+"""Pipelined executor == sequential chunked path (ISSUE 5 lockdown).
+
+The pipelined engine batches same-phase decode entries into one dispatch,
+stages prefill chunks through round-robin lanes, and syncs once per step —
+all of it a reordering/batching of the same programs over the same values,
+so results must be **bit-identical** to the sequential executor (which is
+itself locked to ``generate`` by the PR-2/PR-3 suites; one direct
+cross-check against graph + eager generate rides along here).
+
+The core checks are plain seeded functions so they ALWAYS run; when
+hypothesis is available the same checks additionally run with drawn prompt
+lengths and seeds.  Engines are shared per beam-select mode so compiled
+programs are reused across cases.
+
+Also covered: the ``engine.release`` leak fix (aborted / drained-early
+requests must not leave runtimes or arena pages behind) and the AOT
+``_timed_call`` warmup no longer double-executing device work.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.data import gen_catalog
+from repro.serving import (GREngine, PipelinedEngine, ServingSystem,
+                           make_engine)
+
+SETTINGS = dict(max_examples=3, deadline=None)
+S_MAX = 80          # prompts may cross the 64-token bucket (2 arena pages)
+CHUNK = 32
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    from repro.models import get_model
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, gr, trie, catalog, params
+
+
+@pytest.fixture(scope="module")
+def engines(world):
+    """One (sequential, pipelined) engine pair per beam-select mode, shared
+    across cases so compiled step programs are reused."""
+    cfg, gr, trie, catalog, params = world
+    cache = {}
+
+    def get(mode):
+        if mode not in cache:
+            pair = []
+            for ex in ("sequential", "pipelined"):
+                scfg = ServeConfig(max_batch_requests=8,
+                                   scheduler_policy="chunked",
+                                   prefill_chunk_tokens=CHUNK,
+                                   beam_select=mode, executor=ex)
+                pair.append(make_engine(
+                    cfg, gr, params, trie, scfg,
+                    spec=EngineSpec(backend="graph", num_streams=2,
+                                    beam_select=mode)))
+            cache[mode] = tuple(pair)
+        return cache[mode]
+
+    return get
+
+
+def _prompts(world, lens, seed):
+    cfg = world[0]
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+            for L in lens]
+
+
+def _serve(engine, prompts, arrivals=None):
+    system = ServingSystem(engine, engine.serve_cfg)
+    hs = [system.submit(p, arrival_s=0.0 if arrivals is None
+                        else arrivals[i])
+          for i, p in enumerate(prompts)]
+    system.drain()
+    assert all(h.done() for h in hs)
+    return [h.result() for h in hs], system
+
+
+def check_executor_equivalence(world, engines, lens, seed, mode,
+                               staggered=False):
+    """Pipelined results are bit-identical to sequential, and the engine
+    leaves no per-request state behind."""
+    prompts = _prompts(world, lens, seed)
+    arrivals = [0.001 * i for i in range(len(prompts))] if staggered \
+        else None
+    seq_eng, pipe_eng = engines(mode)
+    res_s, _ = _serve(seq_eng, prompts, arrivals)
+    res_p, _ = _serve(pipe_eng, prompts, arrivals)
+    for a, b in zip(res_s, res_p):
+        np.testing.assert_array_equal(np.asarray(b.items),
+                                      np.asarray(a.items))
+        np.testing.assert_array_equal(np.asarray(b.log_probs),
+                                      np.asarray(a.log_probs))
+    for eng in (seq_eng, pipe_eng):
+        assert not eng._runtimes
+        assert eng.arena.pages_used == 0
+
+
+# ---------------------------------------------------------------------------
+# Always-on seeded instances of the equivalence property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lens,seed,mode,staggered", [
+    ([20, 20, 20], 0, "dense", False),       # same-step decode, width-3 group
+    ([20, 70, 24, 40], 1, "dense", True),    # mixed buckets: 1- and 2-page
+    ([20, 20, 20], 2, "sparse", False),      # sparse trie-gather grouped
+    ([48, 30, 12], 3, "sparse", True),       # staggered phases, sparse
+])
+def test_pipelined_matches_sequential(world, engines, lens, seed, mode,
+                                      staggered):
+    check_executor_equivalence(world, engines, lens, seed, mode, staggered)
+
+
+def test_pipelined_matches_generate_graph_and_eager(world, engines):
+    """Direct cross-check against both execution backends: the pipelined
+    continuous path produces the same items as the fused graph program and
+    the eager per-phase path."""
+    cfg, gr, trie, catalog, params = world
+    prompts = _prompts(world, [40, 28], 7)
+    _, pipe_eng = engines("dense")
+    res, _ = _serve(pipe_eng, prompts)
+    dec = pipe_eng.decoder
+    S = max(len(p) for p in prompts)
+    toks = np.zeros((2, S), np.int32)
+    lens = np.asarray([len(p) for p in prompts], np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    for backend in ("graph", "eager"):
+        ref = dec.generate(params, jnp.asarray(toks), jnp.asarray(lens),
+                           mode=backend)
+        for i, r in enumerate(res):
+            np.testing.assert_array_equal(np.asarray(r.items),
+                                          np.asarray(ref["items"])[i])
+            np.testing.assert_allclose(np.asarray(r.log_probs),
+                                       np.asarray(ref["log_probs"])[i],
+                                       atol=1e-5)
+
+
+def test_dispatch_reduction_and_group_width(world, engines):
+    """The acceptance criterion: decode dispatches per step collapse from
+    O(#decode entries) to O(#distinct phases present)."""
+    prompts = _prompts(world, [20, 20, 20], 11)
+    seq_eng, pipe_eng = engines("dense")
+    s0 = (seq_eng.stats.dispatches, seq_eng.stats.decode_groups,
+          seq_eng.stats.decode_group_width_sum)
+    p0 = (pipe_eng.stats.dispatches, pipe_eng.stats.decode_groups,
+          pipe_eng.stats.decode_group_width_sum)
+    _serve(seq_eng, prompts)
+    _serve(pipe_eng, prompts)
+    seq_disp = seq_eng.stats.dispatches - s0[0]
+    pipe_disp = pipe_eng.stats.dispatches - p0[0]
+    assert pipe_disp < seq_disp
+    pipe_groups = pipe_eng.stats.decode_groups - p0[1]
+    pipe_width = pipe_eng.stats.decode_group_width_sum - p0[2]
+    seq_groups = seq_eng.stats.decode_groups - s0[1]
+    seq_width = seq_eng.stats.decode_group_width_sum - s0[2]
+    # same decode work (one unit per entry)…
+    nd = world[1].num_decode_phases
+    assert pipe_width == seq_width == 3 * (nd - 1)
+    # …but fused: O(#distinct phases present) dispatches per step, so
+    # strictly fewer groups than entries, each singleton on the sequential
+    # executor by definition
+    assert pipe_groups < seq_groups == seq_width
+    assert pipe_eng.stats.decode_group_width_max >= 2
+
+
+# ---------------------------------------------------------------------------
+# engine.release: aborted / drained-early requests leak nothing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("executor", ["sequential", "pipelined"])
+def test_abort_releases_runtimes_and_pages(world, engines, executor):
+    prompts = _prompts(world, [200, 64], 13)       # long prompts: many chunks
+    seq_eng, pipe_eng = engines("dense")
+    eng = seq_eng if executor == "sequential" else pipe_eng
+    system = ServingSystem(eng, eng.serve_cfg)
+    hs = [system.submit(p, arrival_s=0.0) for p in prompts]
+    system.step(1e-6)                              # run the first step only
+    assert eng.arena.pages_used > 0                # mid-flight state exists
+    assert system.abort(hs[0].rid)
+    assert hs[0].rid not in eng._runtimes
+    assert not eng.arena.in_use(hs[0].rid)
+    assert hs[0].aborted() and not hs[0].done()
+    with pytest.raises(RuntimeError, match="aborted"):
+        hs[0].result()
+    system.drain()                                 # the survivor completes
+    assert hs[1].done() and not hs[1].aborted()
+    assert not hs[0].done()
+    assert not eng._runtimes and eng.arena.pages_used == 0
+    assert not system.abort(hs[1].rid)             # finished: untouched
+
+
+def test_abort_without_policy_remove_leaves_engine_state_alone(world,
+                                                               engines):
+    """A policy lacking the optional ``remove`` hook makes abort a no-op
+    (False), so engine state the policy could still schedule stays put."""
+    _, eng = engines("dense")
+    system = ServingSystem(eng, eng.serve_cfg)
+    h = system.submit(np.zeros(200, np.int32), arrival_s=0.0)
+    system.step(1e-6)
+    assert eng.arena.pages_used > 0
+    remove = system.policy.__class__.remove
+    try:
+        del system.policy.__class__.remove
+        assert not system.abort(h.rid)
+        assert not h.aborted()
+        assert eng.arena.pages_used > 0            # nothing was released
+    finally:
+        system.policy.__class__.remove = remove
+    system.drain()                                 # still completes normally
+    assert h.done()
+
+
+def test_drain_sweeps_orphaned_runtimes(world, engines):
+    """A request the policy lost track of mid-flight (the pre-fix leak:
+    admitted but never reaching its final decode phase) is released by
+    drain's orphan sweep."""
+    _, eng = engines("dense")
+    system = ServingSystem(eng, eng.serve_cfg)
+    h = system.submit(np.zeros(200, np.int32), arrival_s=0.0)
+    system.step(1e-6)
+    assert eng.arena.pages_used > 0
+    system.policy.active.clear()                   # simulate the lost request
+    system.policy.waiting.clear()
+    system.drain()
+    assert not h.done()
+    assert h.aborted()                             # swept: handle says so
+    with pytest.raises(RuntimeError, match="aborted"):
+        h.result()
+    assert not eng._runtimes and eng.arena.pages_used == 0
+
+
+def test_arena_growth_evicts_stale_compiled_shapes(world):
+    """Executables compiled against an outgrown pool shape can never be hit
+    again (the pool only grows) and must not pin memory forever."""
+    cfg, gr, trie, catalog, params = world
+    scfg = ServeConfig(scheduler_policy="chunked", kv_arena_pages=2)
+    eng = GREngine(cfg, gr, params, trie, scfg,
+                   spec=EngineSpec(backend="graph", num_streams=1))
+    arena = eng._ensure_arena()
+    eng._note_arena()
+    old_p = arena.num_pages
+    eng._compiled[("chunk", 16, 1, old_p)] = object()
+    eng._compiled[("phase", 1, 1, 1, old_p)] = object()
+    eng._compiled[("phase0", 1)] = object()        # pool-shape-free: kept
+    arena.alloc(0, (old_p + 1) * arena.page_tokens)    # forces growth
+    eng._note_arena()
+    assert arena.num_pages > old_p
+    assert ("chunk", 16, 1, old_p) not in eng._compiled
+    assert ("phase", 1, 1, 1, old_p) not in eng._compiled
+    assert ("phase0", 1) in eng._compiled
+
+
+# ---------------------------------------------------------------------------
+# AOT warmup: compile without double-executing the device work
+# ---------------------------------------------------------------------------
+
+def test_timed_call_warmup_executes_once(world):
+    cfg, gr, trie, catalog, params = world
+    scfg = ServeConfig(scheduler_policy="chunked")
+    eng = GREngine(cfg, gr, params, trie, scfg,
+                   spec=EngineSpec(backend="graph", num_streams=1))
+    runs = []
+
+    def f(x):
+        jax.debug.callback(lambda: runs.append(1), ordered=True)
+        return x * 2.0
+
+    jf = jax.jit(f)
+    x = jnp.arange(4.0)
+    out, dt, cs = eng._timed_call(("probe", 4), jf, x)
+    jax.effects_barrier()
+    assert cs > 0.0                    # first use compiled…
+    assert len(runs) == 1              # …but executed exactly once
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x) * 2.0)
+    out, dt, cs = eng._timed_call(("probe", 4), jf, x)
+    jax.effects_barrier()
+    assert cs == 0.0 and len(runs) == 2
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-drawn instances (skipped when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(**SETTINGS)
+    @given(st.lists(st.integers(8, S_MAX), min_size=2, max_size=3),
+           st.integers(0, 2**31 - 1), st.booleans())
+    def test_pipelined_equivalence_property(world, engines, lens, seed,
+                                            staggered):
+        check_executor_equivalence(world, engines, lens, seed, "dense",
+                                   staggered)
+
+    @settings(**SETTINGS)
+    @given(st.lists(st.integers(8, S_MAX), min_size=2, max_size=3),
+           st.integers(0, 2**31 - 1))
+    def test_pipelined_equivalence_property_sparse(world, engines, lens,
+                                                   seed):
+        check_executor_equivalence(world, engines, lens, seed, "sparse")
