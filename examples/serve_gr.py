@@ -10,6 +10,9 @@ Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
       [--executor sequential|pipelined]   (chunked-step executor, DESIGN §8:
                                   pipelined = batched same-phase decode over
                                   the paged KV arena, one sync per step)
+      [--prefix-cache]   (cross-request KV prefix reuse, DESIGN §9; chunked
+                          policy only — warm prompts skip cached prefill)
+      [--host-spill-mb 64]   (host-RAM budget for evicted cache pages)
       [--baseline]   (PagedAttention-style pipeline instead of xGR)
 """
 
@@ -24,7 +27,7 @@ from repro.core import ItemTrie
 from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
 from repro.serving import (ServingSystem, available_policies,
-                           beam_pool_summary, engine_summary,
+                           beam_pool_summary, cache_summary, engine_summary,
                            latency_summary, make_engine, pipeline_summary,
                            ttft_summary)
 
@@ -49,6 +52,14 @@ def main():
                     help="chunked-step executor: pipelined fuses same-phase "
                          "decodes into one batched dispatch over the paged "
                          "KV arena (bit-identical results)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request KV prefix cache (chunked policy): "
+                         "re-requests over shared histories adopt cached "
+                         "pages and prefill only the cold suffix "
+                         "(bit-identical results)")
+    ap.add_argument("--host-spill-mb", type=int, default=0,
+                    help="host-RAM spill budget (MiB) for cache pages "
+                         "evicted under pool pressure (0 = drop on evict)")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -81,7 +92,9 @@ def main():
                        graph_dispatch=spec.backend == "graph",
                        prefill_chunk_tokens=args.chunk_tokens,
                        beam_select=args.beam_select,
-                       executor=args.executor)
+                       executor=args.executor,
+                       prefix_cache=args.prefix_cache,
+                       host_spill_bytes=args.host_spill_mb << 20)
     spec = dataclasses.replace(spec, beam_select=args.beam_select)
     engine = make_engine(cfg, gr, params, trie, scfg, spec=spec)
 
@@ -122,6 +135,15 @@ def main():
               f"sync stall {pl['sync_stall_s']:.2f}s, "
               f"arena peak {pl['arena_pages_peak']}/{pl['arena_pages']} "
               f"pages ({pl['arena_util_peak'] * 100:.0f}% at peak)")
+    if args.prefix_cache:
+        cs = cache_summary(engine.stats)
+        print(f"  prefix$    : hit rate {cs['hit_rate']*100:.0f}% "
+              f"({cs['hit_requests']}/{cs['lookups']} requests), "
+              f"{cs['tokens_skipped']} prefill tokens skipped, "
+              f"{cs['cached_pages']} pages cached "
+              f"(+{cs['spilled_pages']} spilled), "
+              f"spill {cs['spill_bytes'] >> 20} MiB / "
+              f"restore {cs['restore_bytes'] >> 20} MiB")
     r0 = results[0]
     if "batch_size" in r0.timing:
         shape = (f"in a {int(r0.timing['batch_size'])}-request batch "

@@ -160,4 +160,51 @@ print(f"pipelined smoke ok: identical items, "
       f"{sq.dispatches} -> {pl.dispatches} dispatches, "
       f"max group width {pl.decode_group_width_max}")
 EOF
+echo "== prefix-cache smoke: repeated prefixes, bit-identical, warm hits =="
+python - <<'EOF'
+import jax, numpy as np
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.data import gen_catalog, gen_histories
+from repro.models import get_model
+from repro.serving import ServingSystem, cache_summary, make_engine
+
+cfg = get_config("onerec-0.1b").reduced()
+gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+              num_items=100, tid_vocab=cfg.vocab_size)
+catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+trie = ItemTrie(catalog, cfg.vocab_size)
+params = get_model(cfg).init(jax.random.PRNGKey(0))
+hist = gen_histories(catalog, 3, max_tokens=72, min_tokens=60, seed=2)
+got = {}
+for on in (False, True):
+    scfg = ServeConfig(max_batch_requests=8, scheduler_policy="chunked",
+                       prefill_chunk_tokens=32, kv_page_tokens=16,
+                       prefix_cache=on, host_spill_bytes=32 << 20)
+    eng = make_engine(cfg, gr, params, trie, scfg,
+                      spec=EngineSpec(backend="graph", num_streams=2))
+    system = ServingSystem(eng, scfg)
+    hs = []
+    for wave in range(2):       # wave 2 re-submits the SAME prompts warm
+        hs += [system.submit(h, arrival_s=0.0) for h in hist]
+        system.drain()
+    assert all(h.done() for h in hs), f"cache={on}: unfinished requests"
+    got[on] = [np.asarray(h.result().items) for h in hs]
+    if on:
+        cs = cache_summary(eng.stats)
+        assert cs["hit_rate"] > 0, f"no warm hits: {cs}"
+        assert cs["tokens_skipped"] > 0, cs
+        pc = eng.prefix_cache
+        assert not eng._runtimes, "leaked runtimes"
+        assert eng.arena.pages_used == pc.device_pages, "leaked pages"
+        assert all(eng.arena.refcount(e.pid) == 1
+                   for e in pc._entries.values() if not e.spilled), \
+            "refcount leak at drain"
+for a, b in zip(got[False], got[True]):
+    assert np.array_equal(a, b), "prefix cache changed results"
+print(f"prefix-cache smoke ok: identical items over 2 waves, "
+      f"hit rate {cs['hit_rate']*100:.0f}%, "
+      f"{cs['tokens_skipped']} prefill tokens skipped")
+EOF
 echo "CI OK"

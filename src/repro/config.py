@@ -274,6 +274,16 @@ class ServeConfig:
     #: initial shared-KV arena pages (0 = small auto default; the arena
     #: grows on demand, preserving live pages)
     kv_arena_pages: int = 0
+    #: cross-request hierarchical KV prefix cache (ISSUE 6): hash prompt
+    #: prefixes at page granularity to refcounted shared page runs, so a
+    #: warm re-request adopts cached pages and skips those prefill chunks
+    #: entirely (copy-on-write at the divergence page; bit-identical
+    #: outputs).  Continuous ("chunked") scheduling only.
+    prefix_cache: bool = False
+    #: host-RAM budget (bytes) for the prefix cache's spill tier: device
+    #: pages evicted under pool pressure move here LRU and fault back in
+    #: on a hit.  0 = no spill tier (evicted pages are recomputed).
+    host_spill_bytes: int = 0
 
 
 @dataclass(frozen=True)

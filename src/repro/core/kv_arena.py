@@ -15,13 +15,23 @@ the same values, so the paged path is **bit-identical** to the contiguous
 one (locked down by tests/test_pipelined.py).
 
 Host-side accounting lives in :class:`KVArena`: a free-list allocator with
-``alloc``/``free``/``release`` and occupancy/fragmentation stats.  Freed
-pages return to the pool and are handed out again in any order — the page
-table indirection is exactly what makes a fragmented (non-contiguous) span
-serve attention correctly.  When the pool is exhausted the arena *grows*
-(the device arrays are extended, existing page contents preserved); growth
-changes the pool shape, so engine programs key their compile cache on
-``num_pages``.
+``alloc``/``free``/``release`` and occupancy/fragmentation stats.  Pages
+are **refcounted** (ISSUE 6): a physical page may back the same logical
+prefix span of several requests at once — ``adopt`` builds a page table
+from shared (already-referenced) pages plus freshly-allocated private
+ones, and ``free``/``release`` decrement instead of unconditionally
+returning pages, so a page rejoins the free list only when its last
+reference drops.  The cross-request prefix cache
+(:mod:`repro.serving.prefix_cache`) holds its own reference on every page
+it retains, ``retain``/``decref`` being the page-granularity API it shares
+with request tables.  Freed pages are handed out again in any order — the
+page table indirection is exactly what makes a fragmented (non-contiguous)
+span serve attention correctly.  When the free list cannot satisfy an
+allocation the arena first asks its registered *pressure callback* to
+surrender reclaimable pages (the prefix cache evicts LRU entries, spilling
+them to host RAM) and only then *grows* (the device arrays are extended,
+existing page contents preserved); growth changes the pool shape, so
+engine programs key their compile cache on ``num_pages``.
 
 Unmapped page-table slots use the sentinel ``arena.num_pages`` (one past the
 last physical page): scatters with ``mode="drop"`` discard writes through
@@ -34,7 +44,7 @@ are inert because every consumer masks keys at or beyond ``shared_len``
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -107,6 +117,9 @@ class ArenaStats:
     #: pool size would retroactively halve the ratio after every growth,
     #: hiding exactly the saturation events that forced the growth
     util_peak: float = 0.0
+    #: pages surrendered by the pressure callback instead of growing the
+    #: pool (ISSUE 6: prefix-cache evictions absorbing allocation pressure)
+    reclaimed: int = 0
 
 
 class KVArena:
@@ -133,6 +146,15 @@ class KVArena:
         # most-recently-freed first afterwards (cache-friendly reuse)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._tables: Dict[int, np.ndarray] = {}
+        #: page id -> reference count; absent == free.  A page may be
+        #: referenced by several request tables (shared prefix runs) plus
+        #: the prefix cache's own retain — it returns to the free list only
+        #: when the LAST reference drops.
+        self._refs: Dict[int, int] = {}
+        #: asked to surrender reclaimable pages before the pool grows;
+        #: receives the shortfall, returns pages actually freed (the prefix
+        #: cache registers its LRU eviction here).  Must not allocate.
+        self._pressure: Optional[Callable[[int], int]] = None
         self.stats = ArenaStats()
 
     # ------------------------------------------------------------ geometry
@@ -148,10 +170,19 @@ class KVArena:
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(int(n_tokens), 1) // self.page_tokens)
 
+    @property
+    def page_nbytes(self) -> int:
+        """Device bytes one page occupies (K and V planes together)."""
+        L, _, pg, kvH, hd = self.pages_k.shape
+        return 2 * L * pg * kvH * hd * self.pages_k.dtype.itemsize
+
     # ---------------------------------------------------------- accounting
     @property
     def pages_used(self) -> int:
-        return sum(len(t) for t in self._tables.values())
+        """Physical pages currently referenced (shared pages count ONCE —
+        sharing is exactly what makes this less than the sum of table
+        lengths)."""
+        return self.num_pages - len(self._free)
 
     def in_use(self, rid: int) -> bool:
         return rid in self._tables
@@ -174,33 +205,105 @@ class KVArena:
                 "util_peak": self.stats.util_peak,
                 "requests": len(self._tables)}
 
-    # ------------------------------------------------------------- alloc
-    def alloc(self, rid: int, n_tokens: int) -> np.ndarray:
-        """Map ``n_tokens`` worth of pages to ``rid``; returns its page
-        table (int32 physical page ids, logical order).  Grows the pool when
-        the free list cannot satisfy the request."""
-        if rid in self._tables:
-            raise ValueError(f"rid {rid} already holds arena pages")
-        need = self.pages_for(n_tokens)
-        if need > len(self._free):
-            self._grow(need - len(self._free))
-        table = np.asarray([self._free.pop() for _ in range(need)], np.int32)
-        self._tables[rid] = table
-        self.stats.allocs += 1
+    # -------------------------------------------------- page-level refs
+    def set_pressure_callback(self,
+                              cb: Optional[Callable[[int], int]]) -> None:
+        """Register the reclaim hook consulted before the pool grows."""
+        self._pressure = cb
+
+    def refcount(self, pid: int) -> int:
+        """Current reference count of physical page ``pid`` (0 == free)."""
+        return self._refs.get(int(pid), 0)
+
+    def retain(self, pid: int) -> None:
+        """Add one reference to an already-live page (a free page cannot be
+        retained — take it through :meth:`take_pages`)."""
+        pid = int(pid)
+        if self._refs.get(pid, 0) <= 0:
+            raise ValueError(f"retain on free page {pid}")
+        self._refs[pid] += 1
+
+    def decref(self, pid: int) -> int:
+        """Drop one reference; the page rejoins the free list at zero.
+        Returns the remaining count."""
+        pid = int(pid)
+        n = self._refs.get(pid, 0)
+        if n <= 0:
+            raise ValueError(f"decref on free page {pid}")
+        n -= 1
+        if n == 0:
+            del self._refs[pid]
+            self._free.append(pid)
+        else:
+            self._refs[pid] = n
+        return n
+
+    def take_pages(self, n: int) -> List[int]:
+        """Pop ``n`` free pages, each with ONE reference owned by the
+        caller.  A shortfall first asks the pressure callback to surrender
+        reclaimable pages (prefix-cache LRU eviction) and only grows the
+        pool for whatever remains."""
+        if n > len(self._free) and self._pressure is not None:
+            self.stats.reclaimed += max(
+                0, int(self._pressure(n - len(self._free))))
+        if n > len(self._free):
+            self._grow(n - len(self._free))
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
         self.stats.pages_peak = max(self.stats.pages_peak, self.pages_used)
         self.stats.util_peak = max(self.stats.util_peak,
                                    self.pages_used / self.num_pages)
+        return pages
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self, rid: int, n_tokens: int) -> np.ndarray:
+        """Map ``n_tokens`` worth of private pages to ``rid``; returns its
+        page table (int32 physical page ids, logical order)."""
+        return self.adopt(rid, (), n_tokens)
+
+    def adopt(self, rid: int, shared: Sequence[int],
+              n_tokens: int) -> np.ndarray:
+        """Build ``rid``'s page table from a leading run of ``shared``
+        pages (one reference each TRANSFERRED from the caller — acquire
+        them via :meth:`retain`/:meth:`take_pages` or the prefix cache)
+        plus freshly-allocated private pages covering the rest of the
+        ``n_tokens`` span.  The shared run backs the request's cached
+        prefix; the first private page is the copy-on-write divergence
+        point — prefill scatters only ever target private pages, so
+        shared pages are never mutated."""
+        if rid in self._tables:
+            raise ValueError(f"rid {rid} already holds arena pages")
+        need = self.pages_for(n_tokens)
+        if len(shared) > need:
+            raise ValueError(f"shared run ({len(shared)} pages) exceeds the "
+                             f"{need}-page span of {n_tokens} tokens")
+        for p in shared:
+            if self._refs.get(int(p), 0) <= 0:
+                raise ValueError(f"adopting free page {int(p)}")
+        fresh = self.take_pages(need - len(shared))
+        table = np.asarray(list(map(int, shared)) + fresh, np.int32)
+        self._tables[rid] = table
+        self.stats.allocs += 1
         return table.copy()
 
     def free(self, rid: int) -> int:
-        """Return ``rid``'s pages to the pool; raises KeyError if absent."""
+        """Drop ``rid``'s reference on each of its pages (pages rejoin the
+        pool when their LAST reference drops); raises KeyError if absent.
+        The table is popped BEFORE the decrefs, so a re-entrant or repeated
+        free can never double-decrement a shared page."""
         table = self._tables.pop(rid)
-        self._free.extend(int(p) for p in reversed(table))
+        for p in table:
+            self.decref(int(p))
         self.stats.frees += 1
         return len(table)
 
     def release(self, rid: int) -> int:
-        """Tolerant :meth:`free`: 0 when ``rid`` holds nothing."""
+        """Idempotent :meth:`free`: 0 when ``rid`` holds nothing.  This is
+        the abort / drain-orphan-sweep entry point — those paths can reach
+        the same rid more than once, and with shared refcounted pages a
+        double decrement would corrupt another request's table, so
+        repeated calls MUST be no-ops (locked by tests/test_kv_arena.py)."""
         if rid not in self._tables:
             return 0
         return self.free(rid)
@@ -221,6 +324,25 @@ class KVArena:
             f"pool shape changed: {pages_k.shape} != {self.pages_k.shape}"
         self.pages_k = pages_k
         self.pages_v = pages_v
+
+    def read_page(self, pid: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy one page's (K, V) contents to host memory — the spill
+        direction of the prefix cache's host-RAM tier.  Blocking
+        device->host transfer of ``page_nbytes`` bytes; reads the CURRENT
+        committed pool value, so every prefill scatter that chained through
+        :meth:`commit_pages` is visible."""
+        pid = int(pid)
+        return (np.asarray(self.pages_k[:, pid]),
+                np.asarray(self.pages_v[:, pid]))
+
+    def write_page(self, pid: int, k: np.ndarray, v: np.ndarray) -> None:
+        """Install host (K, V) contents into device page ``pid`` — the
+        restore direction of the spill tier.  Functional ``.at[].set`` on
+        the committed pool: in-flight dispatches keep reading the pool
+        VALUE they were issued with, exactly like a prefill scatter."""
+        pid = int(pid)
+        self.pages_k = self.pages_k.at[:, pid].set(jnp.asarray(k))
+        self.pages_v = self.pages_v.at[:, pid].set(jnp.asarray(v))
 
     def _grow(self, min_extra: int) -> None:
         """Extend the pool, preserving every existing page's contents.

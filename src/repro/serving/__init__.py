@@ -1,9 +1,10 @@
 from repro.serving.api import RequestHandle, ServeResult, ServingSystem
 from repro.serving.engine import GREngine, EngineStats
-from repro.serving.metrics import (beam_pool_summary, engine_summary,
-                                   latency_summary, percentile,
-                                   pipeline_summary, ttft_summary)
+from repro.serving.metrics import (beam_pool_summary, cache_summary,
+                                   engine_summary, latency_summary,
+                                   percentile, pipeline_summary, ttft_summary)
 from repro.serving.pipeline import PipelinedEngine, make_engine
+from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
                                    StepPlan, group_decode_entries)
 from repro.serving.scheduler import (BucketAffinityBatcher,
@@ -15,8 +16,9 @@ from repro.serving.server import ServerReport, run_server
 
 __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
            "GREngine", "EngineStats", "PipelinedEngine", "make_engine",
+           "PrefixCache", "CacheStats",
            "latency_summary", "engine_summary", "percentile", "ttft_summary",
-           "beam_pool_summary", "pipeline_summary",
+           "beam_pool_summary", "pipeline_summary", "cache_summary",
            "BatchPlan", "RequestState", "Phase", "StepEntry", "StepPlan",
            "group_decode_entries",
            "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",

@@ -155,6 +155,12 @@ class ServingSystem:
                 self.policy.num_decode_phases = gr.num_decode_phases
             if hasattr(engine, "min_bucket"):
                 engine.min_bucket = min_bucket      # chunked cache sizing
+            if (getattr(getattr(engine, "serve_cfg", None),
+                        "prefix_cache", False)
+                    and hasattr(self.policy, "prefix_probe")):
+                # prefix cache (ISSUE 6): the scheduler probes the engine
+                # at admission so it plans only the cold prompt suffix
+                self.policy.prefix_probe = engine.prefix_probe
 
     # ------------------------------------------------------------ lifecycle
     @property

@@ -43,6 +43,7 @@ from repro.config import EngineSpec, GRConfig, ModelConfig, ServeConfig
 from repro.core.gr_decode import ExecutionBackend, GRDecoder, make_backend
 from repro.core.item_trie import ItemTrie
 from repro.core.kv_arena import KVArena, init_arena
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import BatchPlan, StepPlan
 from repro.serving.scheduler import bucket_len
 
@@ -74,6 +75,20 @@ class EngineStats:
     arena_pages: int = 0            # current pool size (gauge)
     arena_pages_peak: int = 0       # peak pages simultaneously in use
     arena_util_peak: float = 0.0    # peak used/total, measured at the peak
+    # --- cross-request prefix cache (ISSUE 6; see serving/prefix_cache.py
+    # and metrics.cache_summary) — mirrored from PrefixCache.stats so the
+    # standard report plumbing works on stats alone:
+    cache_enabled: bool = False
+    cache_lookups: int = 0          # probed requests
+    cache_hits: int = 0             # requests that adopted >= 1 page
+    cache_hit_tokens: int = 0       # prefill tokens skipped
+    cache_lookup_tokens: int = 0    # cachable tokens probed (rate denom)
+    cache_insert_pages: int = 0
+    cache_evictions: int = 0        # device pages evicted under pressure
+    cache_spill_bytes: int = 0      # device -> host spill traffic
+    cache_restore_bytes: int = 0    # host -> device fault-back traffic
+    cache_pages: int = 0            # gauge: device-resident cached pages
+    cache_spilled_pages: int = 0    # gauge: host-resident cached pages
 
 
 @dataclasses.dataclass
@@ -122,6 +137,7 @@ class GREngine:
         # --- continuous (chunked) serving state ---------------------------
         self.min_bucket = 64
         self.arena: Optional[KVArena] = None        # lazy (first admit)
+        self.prefix_cache: Optional[PrefixCache] = None   # built with arena
         self._runtimes: Dict[int, _ChunkRuntime] = {}
         self._compiled: Dict[tuple, object] = {}    # shape key -> executable
         # The chunk program rewrites the page pool functionally.  On this
@@ -210,24 +226,66 @@ class GREngine:
     def _ensure_arena(self) -> KVArena:
         if self.arena is None:
             self.arena = init_arena(self.cfg, self.gr, self.serve_cfg)
+            if getattr(self.serve_cfg, "prefix_cache", False):
+                self.prefix_cache = PrefixCache(
+                    self.arena,
+                    host_spill_bytes=getattr(self.serve_cfg,
+                                             "host_spill_bytes", 0))
+                self.stats.cache_enabled = True
         return self.arena
+
+    def _new_runtime(self, req, shared_pids=(),
+                     shared_len: int = 0) -> _ChunkRuntime:
+        """Create and register ``req``'s runtime: a page table adopting the
+        (possibly empty) cached ``shared_pids`` run plus private pages for
+        the cold suffix, and the per-request unshared decode cache."""
+        arena = self._ensure_arena()
+        s_max = bucket_len(req.prompt_len, self.min_bucket)
+        table = arena.adopt(req.rid, shared_pids, s_max)
+        cfg, gr = self.cfg, self.gr
+        ushape = (cfg.num_layers, 1, gr.beam_width,
+                  gr.num_decode_phases, cfg.num_kv_heads,
+                  cfg.resolved_head_dim)
+        rt = _ChunkRuntime(table=table, shared_len=shared_len,
+                           unshared_k=jnp.zeros(ushape, jnp.float32),
+                           unshared_v=jnp.zeros(ushape, jnp.float32))
+        self._runtimes[req.rid] = rt
+        self._note_arena()
+        return rt
 
     def _runtime(self, req) -> _ChunkRuntime:
         rt = self._runtimes.get(req.rid)
         if rt is None:
-            arena = self._ensure_arena()
-            s_max = bucket_len(req.prompt_len, self.min_bucket)
-            table = arena.alloc(req.rid, s_max)
-            cfg, gr = self.cfg, self.gr
-            ushape = (cfg.num_layers, 1, gr.beam_width,
-                      gr.num_decode_phases, cfg.num_kv_heads,
-                      cfg.resolved_head_dim)
-            rt = _ChunkRuntime(table=table,
-                               unshared_k=jnp.zeros(ushape, jnp.float32),
-                               unshared_v=jnp.zeros(ushape, jnp.float32))
-            self._runtimes[req.rid] = rt
-            self._note_arena()
+            rt = self._new_runtime(req)
         return rt
+
+    # ------------------------------------------------ prefix cache (ISSUE 6)
+    def prefix_probe(self, req) -> int:
+        """Adopt ``req``'s cached prefix run, if any; returns the prompt
+        tokens covered (0 = cold).  The chunked scheduler calls this at
+        admission (via the hook :class:`~repro.serving.api.ServingSystem`
+        injects) and starts the request's prefill at the returned offset —
+        the hit's chunks are never planned, let alone executed.  Creates
+        the request's runtime, so the adopted pages are owned (and released
+        through the normal abort/drain paths) from this moment on."""
+        if self.prefix_cache is None and not getattr(
+                self.serve_cfg, "prefix_cache", False):
+            return 0
+        rt = self._runtimes.get(req.rid)
+        if rt is not None:                  # already admitted (re-probe)
+            return rt.shared_len
+        self._ensure_arena()
+        pids, n_tok = self.prefix_cache.acquire(req.tokens)
+        rt = self._new_runtime(req, shared_pids=pids, shared_len=n_tok)
+        return n_tok
+
+    def _cache_insert(self, req, rt: _ChunkRuntime) -> None:
+        """Publish a request's freshly-completed prefill pages into the
+        prefix cache (call at its LAST chunk: every full page is written —
+        in-flight async scatters are ordered by the pool value chain)."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(req.tokens, rt.table)
+            self._note_arena()
 
     def _note_arena(self) -> None:
         if self.arena is None:
@@ -244,6 +302,19 @@ class GREngine:
         self.stats.arena_pages = P
         self.stats.arena_pages_peak = self.arena.stats.pages_peak
         self.stats.arena_util_peak = self.arena.stats.util_peak
+        c = self.prefix_cache
+        if c is not None:
+            s, cs = self.stats, c.stats
+            s.cache_lookups = cs.lookups
+            s.cache_hits = cs.hits
+            s.cache_hit_tokens = cs.hit_tokens
+            s.cache_lookup_tokens = cs.lookup_tokens
+            s.cache_insert_pages = cs.insert_pages
+            s.cache_evictions = cs.evictions
+            s.cache_spill_bytes = cs.spill_bytes
+            s.cache_restore_bytes = cs.restore_bytes
+            s.cache_pages = c.device_pages
+            s.cache_spilled_pages = c.spilled_pages
 
     def release(self, rid: int) -> bool:
         """Free a request's engine-side state: its runtime AND its arena
@@ -306,6 +377,7 @@ class GREngine:
                 self.stats.prompt_tokens += e.chunk_len
                 self.stats.padded_tokens += cb
                 if e.last_chunk:
+                    self._cache_insert(r, rt)
                     (rt.state, rt.parent), dt, cs = self._timed_call(
                         ("phase0", 1), self._jit_phase0, logits)
                     device_s += dt

@@ -68,6 +68,33 @@ def pipeline_summary(stats) -> Dict[str, float]:
     }
 
 
+def cache_summary(stats) -> Dict[str, float]:
+    """Prefix-cache stats (ISSUE 6 cross-request KV reuse).
+
+    ``hit_rate`` is token-weighted: prefill tokens adopted from the cache
+    over cachable tokens probed (full leading pages of every admitted
+    prompt), so a run of unrelated prompts scores 0.0 and an exact
+    re-submit scores ~1.0.  ``tokens_skipped`` is prefill work the
+    scheduler never planned; ``spill_bytes``/``restore_bytes`` are
+    cumulative device<->host page traffic, and the two gauges report the
+    cache's current footprint (device pages it holds a reference on, and
+    entries living only in the host spill tier)."""
+    return {
+        "enabled": bool(stats.cache_enabled),
+        "lookups": int(stats.cache_lookups),
+        "hit_requests": int(stats.cache_hits),
+        "hit_rate":
+            stats.cache_hit_tokens / max(stats.cache_lookup_tokens, 1),
+        "tokens_skipped": int(stats.cache_hit_tokens),
+        "insert_pages": int(stats.cache_insert_pages),
+        "evictions": int(stats.cache_evictions),
+        "spill_bytes": int(stats.cache_spill_bytes),
+        "restore_bytes": int(stats.cache_restore_bytes),
+        "cached_pages": int(stats.cache_pages),
+        "spilled_pages": int(stats.cache_spilled_pages),
+    }
+
+
 def latency_summary(latencies_s: Sequence[float],
                     duration_s: float) -> Dict[str, float]:
     arr = np.asarray(latencies_s, np.float64)

@@ -288,6 +288,10 @@ class PipelinedEngine(GREngine):
             self.stats.prompt_tokens += e.chunk_len
             self.stats.padded_tokens += cb
             if e.last_chunk:
+                # publish the completed prefill's pages into the prefix
+                # cache now (host bookkeeping only — the in-flight scatter
+                # is ordered ahead of any adopter by the pool value chain)
+                self._cache_insert(r, rt)
                 phase0.append((r, rt, logits))
             else:
                 sync_list.append(logits)

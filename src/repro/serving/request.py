@@ -43,6 +43,8 @@ class RequestState:
     # --- continuous (chunked) batching ------------------------------------
     phase: Phase = Phase.QUEUED
     next_offset: int = 0            # prompt tokens already prefilled
+    cached_tokens: int = 0          # leading tokens adopted from the prefix
+                                    # cache (prefill skipped; ISSUE 6)
     decode_phase: int = 0           # next beam phase to run (1..ND-1)
     first_beam_s: Optional[float] = None    # TTFT point: first beam phase ran
 

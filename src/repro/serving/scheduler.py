@@ -320,6 +320,13 @@ class ChunkedPrefillScheduler:
         self.decode_cost = 1                    # tokens per decode entry
         self.num_decode_phases = 3              # ND (beam phases per request)
         self._decode_turn = False               # degenerate-budget fairness
+        #: prefix-cache probe (ISSUE 6), injected by ServingSystem from
+        #: ``engine.prefix_probe`` when ``ServeConfig.prefix_cache`` is on:
+        #: called once at admission, returns the prompt tokens covered by
+        #: the request's adopted cached prefix — the scheduler then plans
+        #: only the COLD SUFFIX (prefill starts at that offset; the warm
+        #: chunks are never planned at all)
+        self.prefix_probe: Optional[Callable[[RequestState], int]] = None
 
     # ---------------------------------------------------- policy protocol
     def add(self, req: RequestState, now_s: float):
@@ -357,6 +364,13 @@ class ChunkedPrefillScheduler:
             req = self.waiting.popleft()
             req.phase = Phase.PREFILLING
             req.next_offset = 0
+            if self.prefix_probe is not None:
+                # prefix-cache hit: the engine adopted the cached page run
+                # into the request's table; plan only the cold suffix
+                skip = int(self.prefix_probe(req))
+                if skip:
+                    req.cached_tokens = skip
+                    req.next_offset = skip
             self.active.append(req)
 
     def plan_step(self, now_s: float) -> Optional[StepPlan]:

@@ -28,8 +28,8 @@ from typing import Dict, List
 from repro.config import ServeConfig
 from repro.serving.api import ServingSystem
 from repro.serving.engine import GREngine
-from repro.serving.metrics import beam_pool_summary, engine_summary, \
-    latency_summary, pipeline_summary, ttft_summary
+from repro.serving.metrics import beam_pool_summary, cache_summary, \
+    engine_summary, latency_summary, pipeline_summary, ttft_summary
 from repro.serving.request import RequestState
 
 
@@ -50,6 +50,10 @@ class ServerReport:
     #: group widths, end-of-step sync stall, arena occupancy
     #: (see metrics.pipeline_summary)
     pipeline: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: cross-request prefix-cache summary (ISSUE 6): token-weighted hit
+    #: rate, prefill tokens skipped, spill/restore traffic
+    #: (see metrics.cache_summary; ``enabled`` False when the cache is off)
+    cache: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def slo_violations(self) -> int:
@@ -77,4 +81,5 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
         ttft=ttft_summary(ttft),
         beam_pool=beam_pool_summary(engine.stats),
         pipeline=pipeline_summary(engine.stats),
+        cache=cache_summary(engine.stats),
     )

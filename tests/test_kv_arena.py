@@ -123,6 +123,107 @@ def test_init_arena_reads_serve_config():
 
 
 # ---------------------------------------------------------------------------
+# Refcounted sharing: adopt / retain / decref (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def test_adopt_shares_pages_and_refcounts():
+    a = _arena(num_pages=4)
+    t0 = a.alloc(0, 2 * PG)
+    shared = [int(t0[0])]
+    a.retain(shared[0])                         # cache-style extra ref
+    a.retain(shared[0])                         # ref TRANSFERRED to adopt
+    t1 = a.adopt(1, shared, 2 * PG)             # shares page 0, 1 private
+    assert int(t1[0]) == shared[0] and int(t1[1]) != shared[0]
+    assert a.refcount(shared[0]) == 3           # rid0 + cache + rid1
+    assert _occ_invariant(a)["pages_used"] == 3  # physical, not per-rid
+    assert a.free(0) == 2
+    assert a.refcount(shared[0]) == 2           # shared page survives
+    assert a.free(1) == 2
+    assert a.refcount(shared[0]) == 1
+    assert _occ_invariant(a)["pages_used"] == 1
+    assert a.decref(shared[0]) == 0             # last ref -> pool
+    assert _occ_invariant(a)["pages_used"] == 0
+
+
+def test_adopt_validates_shared_run():
+    a = _arena(num_pages=4)
+    with pytest.raises(ValueError):
+        a.adopt(0, [0], PG // 2)                # run longer than the need
+    a.alloc(1, PG)
+    with pytest.raises(ValueError):
+        a.adopt(2, [3], 2 * PG)                 # page 3 is free (not live)
+    with pytest.raises(ValueError):
+        a.retain(3)
+    with pytest.raises(ValueError):
+        a.decref(3)
+
+
+def test_release_idempotent_with_shared_pages():
+    """The abort path and the drain orphan sweep can BOTH release a request
+    (engine.release -> arena.release); the second call must be a no-op and
+    must not steal references another adopter still holds."""
+    a = _arena(num_pages=4)
+    t0 = a.alloc(0, PG)
+    pid = int(t0[0])
+    a.retain(pid)                               # cache reference
+    a.retain(pid)                               # ref transferred to adopt
+    a.adopt(1, [pid], PG)                       # second adopter
+    assert a.refcount(pid) == 3
+    assert a.release(0) == 1
+    assert a.release(0) == 0                    # double release: no decref
+    assert a.release(0) == 0
+    assert a.refcount(pid) == 2                 # rid1 + cache intact
+    assert a.release(1) == 1 and a.release(1) == 0
+    assert a.refcount(pid) == 1
+    assert _occ_invariant(a)["pages_used"] == 1
+    a.decref(pid)
+    assert _occ_invariant(a)["pages_used"] == 0
+
+
+def test_take_pages_consults_pressure_before_growing():
+    a = _arena(num_pages=2)
+    a.alloc(0, 2 * PG)                          # pool exhausted
+    freed = []
+
+    def cb(need):
+        # surrender rid 0's pages, cache-evict style
+        freed.append(need)
+        n = a.free(0)
+        return n
+
+    a.set_pressure_callback(cb)
+    t1 = a.alloc(1, 2 * PG)
+    assert freed == [2]
+    assert a.stats.grows == 0                   # reclaim avoided growth
+    assert a.stats.reclaimed == 2
+    assert len(t1) == 2
+
+
+def test_pressure_shortfall_falls_back_to_growth():
+    a = _arena(num_pages=2)
+    a.alloc(0, 2 * PG)
+    a.set_pressure_callback(lambda need: 0)     # nothing reclaimable
+    a.alloc(1, PG)
+    assert a.stats.grows == 1                   # still makes progress
+
+
+def test_read_write_page_roundtrip():
+    a = _arena(num_pages=2)
+    t = a.alloc(0, PG)
+    pid = int(t[0])
+    rng = np.random.default_rng(2)
+    shape = (CFG.num_layers, PG, CFG.num_kv_heads, CFG.resolved_head_dim)
+    k = rng.standard_normal(shape).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    a.write_page(pid, k, v)
+    rk, rv = a.read_page(pid)
+    np.testing.assert_array_equal(rk, k)
+    np.testing.assert_array_equal(rv, v)
+    other = 1 - pid                             # neighbour page untouched
+    np.testing.assert_array_equal(np.asarray(a.pages_k)[:, other], 0.0)
+
+
+# ---------------------------------------------------------------------------
 # Device-side gather/scatter through page tables
 # ---------------------------------------------------------------------------
 
