@@ -29,6 +29,14 @@ with growing histories) served with the cross-request KV prefix cache off
 vs on — rid-matched warm-request TTFT, token-weighted hit rate, and the
 prefill tokens the cache skipped (``experiments/bench/``).
 
+Plus the ISSUE-7 sharded scenario: the same traffic swept over
+(replicas, model_axis) replica-fleet shapes on 8 forced host devices —
+each config routes submits across ``replicas`` data-parallel engines, each
+tensor-parallel over a ``model_axis``-wide mesh slice.  Runs in a
+subprocess (the forced-device XLA flag must own process startup) and
+records per-config p99/throughput plus per-replica occupancy to
+``experiments/bench/e2e_sharded.json``.
+
 Batch compute is real measured CPU wall time; queueing/streams are composed
 on the simulated clock (see serving/server.py for the rationale).  The
 shapes are scaled to CPU (reduced model, BW=16) — the paper's relative
@@ -36,6 +44,10 @@ ordering, not absolute numbers, is the reproduction target.
 """
 
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
@@ -226,6 +238,78 @@ def prefix_reuse(cfg, gr, catalog, trie, params):
         f";speedup={record['warm_ttft_speedup']:.2f}x;json={path}")
 
 
+SHARDED_CONFIGS = ((1, 1), (2, 1), (2, 2), (4, 2))
+
+
+def sharded_worker():
+    """ISSUE 7 sweep body — runs in the forced-8-device subprocess."""
+    from repro.serving import make_sharded_system, run_server as _run
+    assert len(jax.devices()) >= 8, jax.devices()
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=8, top_k=8, num_decode_phases=3,
+                  num_items=500, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    hist = gen_histories(catalog, 40, max_tokens=96, seed=13)
+    trace = poisson_trace(hist, rps=150.0, duration_s=0.3, seed=14)
+    record = {"scenario": "sharded", "requests": len(trace), "configs": []}
+    for n, tp in SHARDED_CONFIGS:
+        scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
+                           batch_wait_quota_ms=5.0, num_streams=2,
+                           scheduler_policy="chunked",
+                           prefill_chunk_tokens=128,
+                           num_replicas=n, model_axis=tp)
+        system = make_sharded_system(cfg, gr, params, trie, scfg)
+        rep = _run(system, trace, scfg)
+        s = rep.summary
+        dur = max((r.finish_s for r in rep.requests), default=0.0)
+        per_rep = []
+        for rs in rep.replicas:
+            rs = dict(rs)
+            # occupancy: fraction of the serve window this replica's device
+            # slice spent computing (starved replicas show near 0)
+            rs["occupancy"] = rs["device_s"] / dur if dur > 0 else 0.0
+            per_rep.append(rs)
+        record["configs"].append({
+            "replicas": n, "model_axis": tp,
+            "p99_ms": s["p99_ms"], "avg_ms": s["avg_ms"],
+            "throughput_rps": s["throughput_rps"],
+            "per_replica": per_rep,
+        })
+        share = [f"{r['completed']}@{r['occupancy']*100:.0f}%"
+                 for r in per_rep]
+        row(f"sharded_r{n}_tp{tp}", s["p99_ms"] * 1e3,
+            f"p99_ms={s['p99_ms']:.1f};avg_ms={s['avg_ms']:.1f}"
+            f";reqs={s['requests']}"
+            f";per_replica={'|'.join(share)}")
+    path = write_bench_json("e2e_sharded", record)
+    base = record["configs"][0]["p99_ms"]
+    best = min(c["p99_ms"] for c in record["configs"])
+    row("sharded_summary", best,
+        f"p99_best_ms={best:.1f};p99_1x1_ms={base:.1f}"
+        f";configs={len(record['configs'])};json={path}")
+
+
+def sharded():
+    """ISSUE 7: replica-fleet sweep in a subprocess — the forced-device
+    XLA flag must own process startup, so the sweep cannot run in the
+    parent bench process."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-worker"],
+        env=env, cwd=root, capture_output=True, text=True, timeout=1200)
+    sys.stdout.write(proc.stdout)           # relay the worker's CSV rows
+    if proc.returncode != 0:
+        row("sharded_FAILED", 0.0, proc.stderr.strip().replace("\n", " ")
+            [-300:])
+
+
 def main():
     cfg = get_config("onerec-0.1b").reduced()
     gr = GRConfig(beam_width=16, top_k=16, num_decode_phases=3,
@@ -263,7 +347,11 @@ def main():
     beam_select_modes(cfg, gr, catalog, trie, params)
     pipeline_executors(cfg, gr, catalog, trie, params)
     prefix_reuse(cfg, gr, catalog, trie, params)
+    sharded()
 
 
 if __name__ == "__main__":
-    main()
+    if "--sharded-worker" in sys.argv:
+        sharded_worker()
+    else:
+        main()

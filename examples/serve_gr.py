@@ -14,6 +14,11 @@ Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
                           policy only — warm prompts skip cached prefill)
       [--host-spill-mb 64]   (host-RAM budget for evicted cache pages)
       [--baseline]   (PagedAttention-style pipeline instead of xGR)
+      [--replicas 2 --model-axis 2]   (sharded serving, DESIGN §10: route
+                          across data-parallel replicas, each running
+                          tensor-parallel over its own device-mesh slice;
+                          needs replicas x model_axis devices, e.g.
+                          XLA_FLAGS=--xla_force_host_platform_device_count=8)
 """
 
 import argparse
@@ -28,8 +33,8 @@ from repro.data import gen_catalog, gen_histories, poisson_trace
 from repro.models import get_model
 from repro.serving import (ServingSystem, available_policies,
                            beam_pool_summary, cache_summary, engine_summary,
-                           latency_summary, make_engine, pipeline_summary,
-                           ttft_summary)
+                           latency_summary, make_engine, make_sharded_system,
+                           pipeline_summary, replica_summary, ttft_summary)
 
 
 def main():
@@ -60,6 +65,12 @@ def main():
     ap.add_argument("--host-spill-mb", type=int, default=0,
                     help="host-RAM spill budget (MiB) for cache pages "
                          "evicted under pool pressure (0 = drop on evict)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel replicas; the router load-balances "
+                         "submits by least outstanding tokens")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="tensor-parallel degree per replica ('model' mesh "
+                         "axis); needs replicas x model_axis devices")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -94,12 +105,19 @@ def main():
                        beam_select=args.beam_select,
                        executor=args.executor,
                        prefix_cache=args.prefix_cache,
-                       host_spill_bytes=args.host_spill_mb << 20)
+                       host_spill_bytes=args.host_spill_mb << 20,
+                       num_replicas=args.replicas,
+                       model_axis=args.model_axis)
     spec = dataclasses.replace(spec, beam_select=args.beam_select)
-    engine = make_engine(cfg, gr, params, trie, scfg, spec=spec)
 
     # --- the online request loop: submit -> step -> drain ------------------
-    system = ServingSystem(engine, scfg)
+    if args.replicas > 1 or args.model_axis > 1:
+        system = make_sharded_system(cfg, gr, params, trie, scfg,
+                                     attention_impl=spec.attention_impl,
+                                     spec=spec)
+    else:
+        engine = make_engine(cfg, gr, params, trie, scfg, spec=spec)
+        system = ServingSystem(engine, scfg)
     handles = []
     for r in trace:                     # submit advances the clock to each
         handles.append(system.submit(r.tokens, arrival_s=r.arrival_s))
@@ -118,17 +136,18 @@ def main():
           f"| p99 {t['ttft_p99_ms']:.1f} (== latency under monolithic)")
     print(f"  SLO ({scfg.slo_ms:.0f} ms p99): "
           f"{viol}/{s['requests']} violations")
-    es = engine_summary(engine.stats)
+    stats = system.engine_stats()       # replica-0 or cross-replica merge
+    es = engine_summary(stats)
     print(f"  engine     : {es['batches']} batches, "
           f"{es['dispatches_per_batch']:.1f} dispatches/batch, "
           f"device {es['device_s']:.2f}s, host-mask {es['host_mask_s']:.2f}s, "
           f"compile {es['compile_s']:.1f}s (excluded from latency)")
-    bp = beam_pool_summary(engine.stats)
+    bp = beam_pool_summary(stats)
     print(f"  beam pool  : {args.beam_select}, mean {bp['mean_pool']:.0f} / "
           f"max {bp['max_pool']} candidates per beam, "
           f"sort work saved {bp['saved_fraction']*100:.0f}%")
     if args.policy == "chunked":
-        pl = pipeline_summary(engine.stats)
+        pl = pipeline_summary(stats)
         print(f"  executor   : {args.executor}, decode group width "
               f"mean {pl['mean_group_width']:.2f} / "
               f"max {pl['max_group_width']}, "
@@ -136,7 +155,7 @@ def main():
               f"arena peak {pl['arena_pages_peak']}/{pl['arena_pages']} "
               f"pages ({pl['arena_util_peak'] * 100:.0f}% at peak)")
     if args.prefix_cache:
-        cs = cache_summary(engine.stats)
+        cs = cache_summary(stats)
         print(f"  prefix$    : hit rate {cs['hit_rate']*100:.0f}% "
               f"({cs['hit_requests']}/{cs['lookups']} requests), "
               f"{cs['tokens_skipped']} prefill tokens skipped, "
@@ -144,6 +163,16 @@ def main():
               f"(+{cs['spilled_pages']} spilled), "
               f"spill {cs['spill_bytes'] >> 20} MiB / "
               f"restore {cs['restore_bytes'] >> 20} MiB")
+    if args.replicas > 1 or args.model_axis > 1:
+        for rs in replica_summary(system.replicas):
+            devs = ",".join(str(d) for d in rs["devices"]) or "default"
+            print(f"  replica {rs['replica']}  : tp={rs['tp']} "
+                  f"devices [{devs}], {rs['completed']} completed / "
+                  f"{rs['submitted']} routed "
+                  f"({rs['routed_tokens']} prompt tokens), "
+                  f"{rs['dispatches']} dispatches, "
+                  f"device {rs['device_s']:.2f}s, "
+                  f"arena peak {rs['arena_pages_peak']} pages")
     r0 = results[0]
     if "batch_size" in r0.timing:
         shape = (f"in a {int(r0.timing['batch_size'])}-request batch "

@@ -284,6 +284,15 @@ class ServeConfig:
     #: pages evicted under pool pressure move here LRU and fault back in
     #: on a hit.  0 = no spill tier (evicted pages are recomputed).
     host_spill_bytes: int = 0
+    #: data-parallel serving replicas (ISSUE 7): the ServingSystem routes
+    #: submits across this many addressable replicas, each owning its own
+    #: engine, KV arena, prefix cache, and scheduler state over a disjoint
+    #: device-mesh slice.  1 = today's single-engine system.
+    num_replicas: int = 1
+    #: tensor-parallel degree per replica (the 'model' mesh axis): attention
+    #: heads and FFN hidden shard per sharding/specs.py.  1 with
+    #: num_replicas=1 keeps the exact unsharded single-device code path.
+    model_axis: int = 1
 
 
 @dataclass(frozen=True)

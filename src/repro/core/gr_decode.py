@@ -429,6 +429,18 @@ class ExecutionBackend(Protocol):
         ...
 
 
+def _place_batch(mesh, tokens, lengths):
+    """Commit a padded request batch to a replica's mesh slice (DESIGN.md
+    §10).  Without a mesh the arrays stay uncommitted — today's exact
+    single-device staging.  With one, input_pspecs places them so the jitted
+    program runs on the replica's devices instead of pulling everything to
+    the process default device."""
+    if mesh is None:
+        return tokens, lengths
+    from repro.sharding.specs import place_inputs
+    return place_inputs((jnp.asarray(tokens), jnp.asarray(lengths)), mesh)
+
+
 class GraphBackend:
     """Whole generate loop as ONE jitted XLA program per shape bucket.
 
@@ -437,13 +449,15 @@ class GraphBackend:
 
     name = "graph"
 
-    def __init__(self, decoder: "GRDecoder"):
+    def __init__(self, decoder: "GRDecoder", mesh=None):
         self.decoder = decoder
+        self.mesh = mesh
         self._warm: set = set()
 
     def execute(self, params, tokens, lengths, dtype=jnp.float32,
                 workspace=None):
         del workspace                      # graph mode: masks live on device
+        tokens, lengths = _place_batch(self.mesh, tokens, lengths)
         key = (tuple(tokens.shape), jnp.dtype(dtype).name)
         compile_s = 0.0
         if key not in self._warm:
@@ -475,10 +489,11 @@ class EagerBackend:
     name = "eager"
 
     def __init__(self, decoder: "GRDecoder", host_overlap: bool = False,
-                 capacity_hint: int = 0):
+                 capacity_hint: int = 0, mesh=None):
         self.decoder = decoder
         self.host_overlap = host_overlap
         self.capacity_hint = capacity_hint
+        self.mesh = mesh
         self._cache: Dict[tuple, tuple] = {}   # shape key -> jitted fns
         self._workspace: Optional[MaskWorkspace] = None
 
@@ -534,6 +549,7 @@ class EagerBackend:
         dec = self.decoder
         gr, cfg, trie = dec.gr, dec.cfg, dec.trie
         sparse = dec._sparse
+        tokens, lengths = _place_batch(self.mesh, tokens, lengths)
         R = tokens.shape[0]
         prefill, step, bstep, compile_s = self._programs(
             params, tokens, lengths, dtype)
@@ -602,12 +618,15 @@ class EagerBackend:
 
 
 def make_backend(name: str, decoder: GRDecoder, host_overlap: bool = False,
-                 capacity_hint: int = 0) -> ExecutionBackend:
-    """Backend factory: the ONLY place a dispatch-mode name is interpreted."""
+                 capacity_hint: int = 0, mesh=None) -> ExecutionBackend:
+    """Backend factory: the ONLY place a dispatch-mode name is interpreted.
+
+    ``mesh`` pins the backend's batches to a replica's device-mesh slice;
+    None keeps the process-default device (single-device serving)."""
     if name == "graph":
-        return GraphBackend(decoder)
+        return GraphBackend(decoder, mesh=mesh)
     if name == "eager":
         return EagerBackend(decoder, host_overlap=host_overlap,
-                            capacity_hint=capacity_hint)
+                            capacity_hint=capacity_hint, mesh=mesh)
     raise ValueError(f"unknown execution backend {name!r}; "
                      f"have ['graph', 'eager']")

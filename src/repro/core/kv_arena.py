@@ -133,15 +133,29 @@ class KVArena:
 
     def __init__(self, cfg: ModelConfig, num_pages: int = 16,
                  page_tokens: int = DEFAULT_PAGE_TOKENS,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None):
         if num_pages < 1 or page_tokens < 1:
             raise ValueError("arena needs >= 1 page of >= 1 token")
         L = cfg.num_layers
         kvH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         self.page_tokens = int(page_tokens)
         self._dtype = dtype
-        self.pages_k = jnp.zeros((L, num_pages, page_tokens, kvH, hd), dtype)
-        self.pages_v = jnp.zeros((L, num_pages, page_tokens, kvH, hd), dtype)
+        self.mesh = mesh
+        #: with a mesh, the pool lives on the replica's device slice with
+        #: the kv-head dim sharded over 'model' (kv_pool_pspec); committed
+        #: placement makes every jitted program that closes over the pool
+        #: run on — and only on — this replica's devices
+        self._sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.sharding.specs import kv_pool_pspec
+            self._sharding = NamedSharding(
+                mesh, kv_pool_pspec(mesh, (L, num_pages, page_tokens,
+                                           kvH, hd), head_dim=3))
+        self.pages_k = self._place(
+            jnp.zeros((L, num_pages, page_tokens, kvH, hd), dtype))
+        self.pages_v = self._place(
+            jnp.zeros((L, num_pages, page_tokens, kvH, hd), dtype))
         # LIFO free list: lowest ids handed out first on a fresh arena,
         # most-recently-freed first afterwards (cache-friendly reuse)
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
@@ -356,20 +370,34 @@ class KVArena:
         extra = max(old, min_extra)
         pad = [(0, 0)] * self.pages_k.ndim
         pad[1] = (0, extra)
-        self.pages_k = jnp.pad(self.pages_k, pad)
-        self.pages_v = jnp.pad(self.pages_v, pad)
+        if self._sharding is not None:
+            # re-derive the sharding for the new page count BEFORE padding so
+            # the grown pool stays committed to this replica's mesh slice
+            from jax.sharding import NamedSharding
+            from repro.sharding.specs import kv_pool_pspec
+            shape = list(self.pages_k.shape)
+            shape[1] = old + extra
+            self._sharding = NamedSharding(
+                self.mesh, kv_pool_pspec(self.mesh, shape, head_dim=3))
+        self.pages_k = self._place(jnp.pad(self.pages_k, pad))
+        self.pages_v = self._place(jnp.pad(self.pages_v, pad))
         self._free[:0] = list(range(old + extra - 1, old - 1, -1))
         self.stats.grows += 1
 
+    def _place(self, arr: jax.Array) -> jax.Array:
+        return arr if self._sharding is None \
+            else jax.device_put(arr, self._sharding)
+
 
 def init_arena(cfg: ModelConfig, gr: GRConfig, serve_cfg,
-               dtype=jnp.float32) -> KVArena:
+               dtype=jnp.float32, mesh=None) -> KVArena:
     """Arena sized from :class:`~repro.config.ServeConfig`:
     ``kv_page_tokens`` tokens per page and ``kv_arena_pages`` initial pages
-    (0 = small auto default; the arena grows on demand)."""
+    (0 = small auto default; the arena grows on demand).  ``mesh`` places
+    the pool on a replica's device slice (DESIGN.md §10)."""
     page_tokens = getattr(serve_cfg, "kv_page_tokens", 0) \
         or DEFAULT_PAGE_TOKENS
     pages = getattr(serve_cfg, "kv_arena_pages", 0) \
         or max(16, getattr(serve_cfg, "max_batch_requests", 8))
     return KVArena(cfg, num_pages=pages, page_tokens=page_tokens,
-                   dtype=dtype)
+                   dtype=dtype, mesh=mesh)

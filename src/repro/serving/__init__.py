@@ -1,10 +1,13 @@
 from repro.serving.api import RequestHandle, ServeResult, ServingSystem
-from repro.serving.engine import GREngine, EngineStats
+from repro.serving.engine import GREngine, EngineStats, merge_engine_stats
 from repro.serving.metrics import (beam_pool_summary, cache_summary,
                                    engine_summary, latency_summary,
-                                   percentile, pipeline_summary, ttft_summary)
+                                   percentile, pipeline_summary,
+                                   replica_summary, ttft_summary)
 from repro.serving.pipeline import PipelinedEngine, make_engine
 from repro.serving.prefix_cache import CacheStats, PrefixCache
+from repro.serving.replica import (Replica, ReplicaRouter,
+                                   make_sharded_system)
 from repro.serving.request import (BatchPlan, Phase, RequestState, StepEntry,
                                    StepPlan, group_decode_entries)
 from repro.serving.scheduler import (BucketAffinityBatcher,
@@ -15,10 +18,13 @@ from repro.serving.scheduler import (BucketAffinityBatcher,
 from repro.serving.server import ServerReport, run_server
 
 __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
-           "GREngine", "EngineStats", "PipelinedEngine", "make_engine",
+           "GREngine", "EngineStats", "merge_engine_stats",
+           "PipelinedEngine", "make_engine",
            "PrefixCache", "CacheStats",
+           "Replica", "ReplicaRouter", "make_sharded_system",
            "latency_summary", "engine_summary", "percentile", "ttft_summary",
            "beam_pool_summary", "pipeline_summary", "cache_summary",
+           "replica_summary",
            "BatchPlan", "RequestState", "Phase", "StepEntry", "StepPlan",
            "group_decode_entries",
            "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",

@@ -39,7 +39,8 @@ from typing import Dict, List, Optional, Union
 import numpy as np
 
 from repro.config import ServeConfig
-from repro.serving.engine import GREngine
+from repro.serving.engine import GREngine, merge_engine_stats
+from repro.serving.replica import Replica, ReplicaRouter
 from repro.serving.request import BatchPlan, Phase, RequestState
 from repro.serving.scheduler import SchedulerPolicy, make_policy
 
@@ -122,21 +123,39 @@ class ServingSystem:
 
     ``policy`` may be a registered name, a :class:`SchedulerPolicy` instance,
     or None to use ``serve_cfg.scheduler_policy``.
+
+    Internally the system always runs a list of :class:`Replica`\\ s
+    (ISSUE 7): the classic single-engine constructor wraps its engine as
+    replica 0, and ``replicas=[...]`` (what
+    :func:`~repro.serving.replica.make_sharded_system` builds) runs N
+    data-parallel replicas behind a :class:`ReplicaRouter`.  ``engine`` /
+    ``policy`` attributes stay as replica-0 views, so single-replica code
+    and tests see the exact pre-replica surface.
     """
 
-    def __init__(self, engine: GREngine,
+    def __init__(self, engine: Optional[GREngine] = None,
                  serve_cfg: Optional[ServeConfig] = None,
                  policy: Union[str, SchedulerPolicy, None] = None,
-                 min_bucket: int = 64):
-        self.engine = engine
-        self.serve_cfg = serve_cfg if serve_cfg is not None \
-            else engine.serve_cfg
-        if policy is None:
-            policy = self.serve_cfg.scheduler_policy
-        if isinstance(policy, str):
-            policy = make_policy(policy, self.serve_cfg, min_bucket)
-        self.policy: SchedulerPolicy = policy
-        self._streams = np.zeros(engine.spec.num_streams)  # busy-until times
+                 min_bucket: int = 64,
+                 replicas: Optional[List[Replica]] = None):
+        if replicas is not None:
+            if engine is not None or isinstance(policy, SchedulerPolicy):
+                raise ValueError("pass either replicas=[...] or a single "
+                                 "engine (+ optional policy), not both")
+            self.replicas: List[Replica] = list(replicas)
+            self.serve_cfg = serve_cfg if serve_cfg is not None \
+                else self.replicas[0].engine.serve_cfg
+        else:
+            if engine is None:
+                raise ValueError("ServingSystem needs an engine or replicas")
+            self.serve_cfg = serve_cfg if serve_cfg is not None \
+                else engine.serve_cfg
+            if policy is None:
+                policy = self.serve_cfg.scheduler_policy
+            if isinstance(policy, str):
+                policy = make_policy(policy, self.serve_cfg, min_bucket)
+            self.replicas = [Replica(0, engine, policy)]
+        self.router = ReplicaRouter(self.replicas)
         self._now = 0.0
         self._next_rid = 0
         self._rids: set = set()
@@ -144,23 +163,53 @@ class ServingSystem:
         self._results: Dict[int, ServeResult] = {}
         self.completed: List[RequestState] = []
         # continuous (chunked) policies plan engine *steps* instead of
-        # whole-request batches; the step pipeline is ONE sequential stream
-        # (num_streams applies to whole-batch dispatch only — see DESIGN §6)
-        self._continuous = hasattr(self.policy, "plan_step")
-        self._busy_until = 0.0
+        # whole-request batches; each replica's step pipeline is ONE
+        # sequential stream (num_streams applies to whole-batch dispatch
+        # only — see DESIGN §6).  Mixing continuous and monolithic policies
+        # across replicas would need two different clock walks at once.
+        modes = {hasattr(r.policy, "plan_step") for r in self.replicas}
+        if len(modes) != 1:
+            raise ValueError("all replicas must use the same scheduling "
+                             "mode (continuous vs monolithic)")
+        self._continuous = modes.pop()
         if self._continuous:
-            gr = getattr(engine, "gr", None)
-            if gr is not None:
-                self.policy.decode_cost = gr.beam_width
-                self.policy.num_decode_phases = gr.num_decode_phases
-            if hasattr(engine, "min_bucket"):
-                engine.min_bucket = min_bucket      # chunked cache sizing
-            if (getattr(getattr(engine, "serve_cfg", None),
-                        "prefix_cache", False)
-                    and hasattr(self.policy, "prefix_probe")):
-                # prefix cache (ISSUE 6): the scheduler probes the engine
-                # at admission so it plans only the cold prompt suffix
-                self.policy.prefix_probe = engine.prefix_probe
+            for rep in self.replicas:
+                self._wire_continuous(rep, min_bucket)
+
+    def _wire_continuous(self, rep: Replica, min_bucket: int) -> None:
+        """Inject the engine-derived hooks a continuous policy needs."""
+        engine = rep.engine
+        gr = getattr(engine, "gr", None)
+        if gr is not None:
+            rep.policy.decode_cost = gr.beam_width
+            rep.policy.num_decode_phases = gr.num_decode_phases
+        if hasattr(engine, "min_bucket"):
+            engine.min_bucket = min_bucket          # chunked cache sizing
+        if (getattr(getattr(engine, "serve_cfg", None),
+                    "prefix_cache", False)
+                and hasattr(rep.policy, "prefix_probe")):
+            # prefix cache (ISSUE 6): the scheduler probes the engine
+            # at admission so it plans only the cold prompt suffix
+            rep.policy.prefix_probe = engine.prefix_probe
+
+    # --------------------------------------------------- replica-0 aliases
+    @property
+    def engine(self):
+        """Replica 0's engine (the only one pre-ISSUE-7 systems have)."""
+        return self.replicas[0].engine
+
+    @property
+    def policy(self) -> SchedulerPolicy:
+        """Replica 0's policy (single-replica view)."""
+        return self.replicas[0].policy
+
+    def engine_stats(self):
+        """Fleet-wide engine stats: replica 0's as-is for a single replica,
+        the :func:`~repro.serving.engine.merge_engine_stats` aggregate
+        otherwise."""
+        if len(self.replicas) == 1:
+            return self.replicas[0].engine.stats
+        return merge_engine_stats([r.engine.stats for r in self.replicas])
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -168,8 +217,8 @@ class ServingSystem:
         return self._now
 
     def pending(self) -> int:
-        """Requests queued but not yet dispatched."""
-        return len(self.policy)
+        """Requests queued but not yet dispatched (all replicas)."""
+        return sum(len(r.policy) for r in self.replicas)
 
     def submit(self, tokens: np.ndarray, arrival_s: Optional[float] = None,
                rid: Optional[int] = None,
@@ -195,13 +244,16 @@ class ServingSystem:
         deadline = arrival_s + slo_ms / 1e3 if slo_ms is not None else None
         state = RequestState(rid, np.asarray(tokens, np.int32), arrival_s,
                              deadline_s=deadline)
-        self.policy.add(state, enqueue_at)
+        # router placement (ISSUE 7): least-outstanding-tokens replica; a
+        # single-replica system trivially places everything on replica 0
+        rep = self.router.place(state)
+        rep.policy.add(state, enqueue_at)
         # capacity-triggered dispatches (quota handled by step/drain)
         while True:
-            plan = self.policy.maybe_dispatch(self._now)
+            plan = rep.policy.maybe_dispatch(self._now)
             if plan is None:
                 break
-            self._dispatch(plan, self._now)
+            self._dispatch(rep, plan, self._now)
         return RequestHandle(self, state)
 
     def step(self, now_s: Optional[float] = None) -> List[ServeResult]:
@@ -215,23 +267,28 @@ class ServingSystem:
             return newly
         newly: List[ServeResult] = []
         while True:
-            deadline = self.policy.next_deadline()
+            rep, deadline = self._earliest_deadline()
             if deadline is None or deadline > now_s:
                 break
             t = max(deadline, self._now)
-            plan = self.policy.maybe_dispatch(t)
+            plan = rep.policy.maybe_dispatch(t)
             if plan is None:             # liveness: never spin on a deadline
-                plan = self.policy.maybe_dispatch(t, force=True)
+                plan = rep.policy.maybe_dispatch(t, force=True)
                 if plan is None:
                     break
             self._now = t
-            newly.extend(self._dispatch(plan, t))
+            newly.extend(self._dispatch(rep, plan, t))
         self._now = max(self._now, now_s)
-        while True:                      # anything due exactly at now_s
-            plan = self.policy.maybe_dispatch(self._now)
-            if plan is None:
-                break
-            newly.extend(self._dispatch(plan, self._now))
+        progressed = True
+        while progressed:                # anything due exactly at now_s
+            progressed = False
+            for rep in self.replicas:
+                while True:
+                    plan = rep.policy.maybe_dispatch(self._now)
+                    if plan is None:
+                        break
+                    newly.extend(self._dispatch(rep, plan, self._now))
+                    progressed = True
         return newly
 
     def drain(self) -> List[ServeResult]:
@@ -240,18 +297,30 @@ class ServingSystem:
         sitting past it)."""
         if self._continuous:
             newly = self._run_steps(until=None)     # run to completion
-            self._now = max(self._now, self._busy_until)
+            self._now = max([self._now]
+                            + [r.busy_until for r in self.replicas])
             self._release_orphans()
             return newly
         newly: List[ServeResult] = []
-        while len(self.policy):
-            deadline = self.policy.next_deadline()
+        while self.pending():
+            rep, deadline = self._earliest_deadline()
+            if rep is None:             # deadline-less leftovers: any queue
+                rep = next(r for r in self.replicas if len(r.policy))
             t = self._now if deadline is None else max(self._now, deadline)
-            plan = self.policy.maybe_dispatch(t, force=True)
+            plan = rep.policy.maybe_dispatch(t, force=True)
             if plan is None:
-                break
+                # liveness: a policy that refuses even a forced dispatch
+                # (empty after a stale deadline) must not wedge the others
+                others = [r for r in self.replicas
+                          if r is not rep and len(r.policy)]
+                for rep in others:
+                    plan = rep.policy.maybe_dispatch(t, force=True)
+                    if plan is not None:
+                        break
+                if plan is None:
+                    break
             self._now = t
-            newly.extend(self._dispatch(plan, t))
+            newly.extend(self._dispatch(rep, plan, t))
         return newly
 
     def abort(self, rid: int) -> bool:
@@ -267,13 +336,17 @@ class ServingSystem:
         request."""
         if rid in self._results:
             return False
-        remove = getattr(self.policy, "remove", None)
-        removed = bool(remove(rid)) if remove is not None else False
-        if removed:
-            self._aborted.add(rid)
-            if hasattr(self.engine, "release"):
-                self.engine.release(rid)
-        return removed
+        owner = self.router.owner(rid)
+        candidates = [owner] if owner is not None else self.replicas
+        for rep in candidates:
+            remove = getattr(rep.policy, "remove", None)
+            removed = bool(remove(rid)) if remove is not None else False
+            if removed:
+                self._aborted.add(rid)
+                if hasattr(rep.engine, "release"):
+                    rep.engine.release(rid)
+                return True
+        return False
 
     def _release_orphans(self) -> None:
         """Free engine-side state of requests that never completed (aborted
@@ -281,36 +354,61 @@ class ServingSystem:
         the ``GREngine._runtimes`` / arena-page leak fix (ISSUE 5).  Swept
         rids are marked aborted so their handles report the truth instead
         of an eternal not-finished limbo."""
-        release = getattr(self.engine, "release", None)
-        active = getattr(self.engine, "active_rids", None)
-        if release is None or active is None:
-            return
-        for rid in list(active()):
-            if rid not in self._results:
-                release(rid)
-                self._aborted.add(rid)
+        for rep in self.replicas:
+            release = getattr(rep.engine, "release", None)
+            active = getattr(rep.engine, "active_rids", None)
+            if release is None or active is None:
+                continue
+            for rid in list(active()):
+                if rid not in self._results:
+                    release(rid)
+                    self._aborted.add(rid)
+
+    def _earliest_deadline(self):
+        """(replica, deadline) with the earliest pending quota deadline
+        across the fleet, or (None, None) when no replica reports one."""
+        best_rep, best = None, None
+        for rep in self.replicas:
+            dl = rep.policy.next_deadline()
+            if dl is not None and (best is None or dl < best):
+                best_rep, best = rep, dl
+        return best_rep, best
 
     # ----------------------------------------------- continuous step loop
     def _run_steps(self, until: Optional[float]) -> List[ServeResult]:
         """Run chunked engine steps back-to-back while work exists.
 
-        Steps start at ``max(clock, engine busy-until)``; ``until=None``
-        drains every admitted and queued request, otherwise only steps that
-        *start* before ``until`` run (the rest wait for the next clock
-        advance, exactly like a real engine loop paused at a snapshot)."""
+        Each round picks the replica with work whose step can start
+        EARLIEST (``max(clock, its busy-until)``) — replicas run their step
+        pipelines in parallel simulated time, so a busy replica never
+        blocks an idle one.  ``until=None`` drains every admitted and
+        queued request on every replica, otherwise only steps that *start*
+        before ``until`` run (the rest wait for the next clock advance,
+        exactly like a real engine loop paused at a snapshot)."""
         newly: List[ServeResult] = []
+        stuck: set = set()      # replicas whose policy planned nothing
         while True:
-            t = max(self._now, self._busy_until)
-            if until is not None and t >= until:
+            candidates = []
+            for rep in self.replicas:
+                if rep.index in stuck or not rep.has_step_work():
+                    continue
+                t = max(self._now, rep.busy_until)
+                if until is not None and t >= until:
+                    continue
+                candidates.append((t, rep.index, rep))
+            if not candidates:
                 break
-            self.policy.admit(t)
-            plan = self.policy.plan_step(t)
-            if plan is None:
-                break
-            timing = self.engine.run_step(plan)     # real measured compute
+            t, _, rep = min(candidates)
+            rep.policy.admit(t)
+            plan = rep.policy.plan_step(t)
+            if plan is None:        # defensive: has_work lied (foreign
+                stuck.add(rep.index)  # policy) — skip, don't spin
+                continue
+            timing = rep.engine.run_step(plan)      # real measured compute
             end = t + timing["critical_s"]
-            self._busy_until = end
-            self.policy.commit(plan)
+            rep.busy_until = end
+            rep.dispatches += 1
+            rep.policy.commit(plan)
             for e in plan.entries:
                 r = e.req
                 if r.dispatch_s is None:
@@ -319,6 +417,7 @@ class ServingSystem:
                     r.first_beam_s = end            # TTFT point
                 if r.phase is Phase.DONE and r.rid not in self._results:
                     r.finish_s = end
+                    rep.completed += 1
                     res = ServeResult(
                         rid=r.rid, items=r.items, log_probs=r.log_probs,
                         arrival_s=r.arrival_s, dispatch_s=r.dispatch_s,
@@ -334,12 +433,15 @@ class ServingSystem:
         return newly
 
     # ------------------------------------------------------------- internal
-    def _dispatch(self, plan: BatchPlan, now_s: float) -> List[ServeResult]:
-        timing = self.engine.run_batch(plan)     # real measured compute
-        sidx = int(np.argmin(self._streams))
-        start = max(now_s, self._streams[sidx])
+    def _dispatch(self, rep: Replica, plan: BatchPlan,
+                  now_s: float) -> List[ServeResult]:
+        timing = rep.engine.run_batch(plan)      # real measured compute
+        sidx = int(np.argmin(rep.streams))
+        start = max(now_s, rep.streams[sidx])
         dur = timing["critical_s"]
-        self._streams[sidx] = start + dur
+        rep.streams[sidx] = start + dur
+        rep.dispatches += 1
+        rep.completed += plan.size
         out = []
         for r in plan.requests:
             r.dispatch_s = start

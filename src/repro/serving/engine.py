@@ -91,6 +91,27 @@ class EngineStats:
     cache_spilled_pages: int = 0    # gauge: host-resident cached pages
 
 
+def merge_engine_stats(stats_list) -> EngineStats:
+    """Aggregate per-replica :class:`EngineStats` into one fleet view
+    (DESIGN.md §10): counters and timers sum; ``*_max``/``*_peak`` high-water
+    marks take the max (a fleet peak is the worst single replica, not a
+    sum); the ``arena_pages``/``cache_*pages`` gauges also max — summing
+    pool sizes across disjoint arenas would fake one giant arena."""
+    out = EngineStats()
+    gauges = ("arena_pages", "cache_pages", "cache_spilled_pages")
+    for s in stats_list:
+        for f in dataclasses.fields(EngineStats):
+            v = getattr(s, f.name)
+            if f.name == "cache_enabled":
+                out.cache_enabled = out.cache_enabled or v
+            elif (f.name.endswith("_max") or f.name.endswith("_peak")
+                  or f.name in gauges):
+                setattr(out, f.name, max(getattr(out, f.name), v))
+            else:
+                setattr(out, f.name, getattr(out, f.name) + v)
+    return out
+
+
 @dataclasses.dataclass
 class _ChunkRuntime:
     """Per-request state for continuous (chunked) serving.
@@ -118,8 +139,16 @@ class GREngine:
     def __init__(self, cfg: ModelConfig, gr: GRConfig, params,
                  trie: Optional[ItemTrie], serve_cfg: ServeConfig,
                  attention_impl: str = "staged",
-                 spec: Optional[EngineSpec] = None):
+                 spec: Optional[EngineSpec] = None, mesh=None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            # Commit params to this replica's mesh slice per the TP/FSDP
+            # pspec rules (DESIGN.md §10).  Committed params pull every
+            # jitted program — and its outputs — onto the slice; GSPMD
+            # propagates the 'model'-axis split through attention/FFN.
+            from repro.sharding.specs import place_params
+            params = place_params(cfg, params, mesh)
         self.params = params
         self.trie = trie
         self.serve_cfg = serve_cfg
@@ -132,7 +161,7 @@ class GREngine:
         self.backend: ExecutionBackend = make_backend(
             self.spec.backend, self.decoder,
             host_overlap=self.spec.host_overlap,
-            capacity_hint=serve_cfg.max_batch_requests)
+            capacity_hint=serve_cfg.max_batch_requests, mesh=mesh)
         self.stats = EngineStats()
         # --- continuous (chunked) serving state ---------------------------
         self.min_bucket = 64
@@ -225,7 +254,8 @@ class GREngine:
 
     def _ensure_arena(self) -> KVArena:
         if self.arena is None:
-            self.arena = init_arena(self.cfg, self.gr, self.serve_cfg)
+            self.arena = init_arena(self.cfg, self.gr, self.serve_cfg,
+                                    mesh=self.mesh)
             if getattr(self.serve_cfg, "prefix_cache", False):
                 self.prefix_cache = PrefixCache(
                     self.arena,
@@ -246,9 +276,20 @@ class GREngine:
         ushape = (cfg.num_layers, 1, gr.beam_width,
                   gr.num_decode_phases, cfg.num_kv_heads,
                   cfg.resolved_head_dim)
+        if self.mesh is not None:
+            # per-request unshared decode caches follow the pool placement:
+            # kv-head dim over 'model' (dim 4 of (L,1,BW,ND,kvH,hd))
+            from jax.sharding import NamedSharding
+            from repro.sharding.specs import kv_pool_pspec
+            sh = NamedSharding(self.mesh,
+                               kv_pool_pspec(self.mesh, ushape, head_dim=4))
+            uk = jax.device_put(jnp.zeros(ushape, jnp.float32), sh)
+            uv = jax.device_put(jnp.zeros(ushape, jnp.float32), sh)
+        else:
+            uk = jnp.zeros(ushape, jnp.float32)
+            uv = jnp.zeros(ushape, jnp.float32)
         rt = _ChunkRuntime(table=table, shared_len=shared_len,
-                           unshared_k=jnp.zeros(ushape, jnp.float32),
-                           unshared_v=jnp.zeros(ushape, jnp.float32))
+                           unshared_k=uk, unshared_v=uv)
         self._runtimes[req.rid] = rt
         self._note_arena()
         return rt

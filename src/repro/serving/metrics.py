@@ -95,6 +95,38 @@ def cache_summary(stats) -> Dict[str, float]:
     }
 
 
+def replica_summary(replicas) -> List[Dict[str, float]]:
+    """Per-replica breakdown (ISSUE 7): one dict per
+    :class:`~repro.serving.replica.Replica`, so load imbalance — a starved
+    or overloaded replica — is visible in every report, not just the
+    sharded bench.  ``queue_depth``/``outstanding_tokens`` are the router's
+    live load metrics; the rest mirrors each replica's engine stats
+    (dispatches, device seconds, sync stall, arena occupancy)."""
+    out = []
+    for rep in replicas:
+        s = rep.engine.stats
+        mesh = rep.mesh
+        out.append({
+            "replica": rep.index,
+            "tp": int(dict(mesh.shape).get("model", 1))
+                  if mesh is not None else 1,
+            "devices": [int(d.id) for d in rep.devices()],
+            "submitted": rep.submitted,
+            "completed": rep.completed,
+            "queue_depth": rep.queue_depth(),
+            "outstanding_tokens": rep.outstanding_tokens(),
+            "routed_tokens": rep.routed_tokens,
+            "dispatches": rep.dispatches,
+            "engine_dispatches": int(s.dispatches),
+            "device_s": float(s.device_s),
+            "sync_stall_s": float(s.sync_stall_s),
+            "arena_pages": int(s.arena_pages),
+            "arena_pages_peak": int(s.arena_pages_peak),
+            "arena_util_peak": float(s.arena_util_peak),
+        })
+    return out
+
+
 def latency_summary(latencies_s: Sequence[float],
                     duration_s: float) -> Dict[str, float]:
     arr = np.asarray(latencies_s, np.float64)

@@ -126,9 +126,9 @@ class PipelinedEngine(GREngine):
     def __init__(self, cfg: ModelConfig, gr: GRConfig, params,
                  trie: Optional[ItemTrie], serve_cfg: ServeConfig,
                  attention_impl: str = "staged",
-                 spec: Optional[EngineSpec] = None):
+                 spec: Optional[EngineSpec] = None, mesh=None):
         super().__init__(cfg, gr, params, trie, serve_cfg,
-                         attention_impl=attention_impl, spec=spec)
+                         attention_impl=attention_impl, spec=spec, mesh=mesh)
         # round-robin input staging lanes: lane -> {chunk_bucket: buf};
         # _lane_pending[i] holds an output of the dispatch that last
         # consumed lane i — numpy args may be zero-copy aliased into the
@@ -343,15 +343,17 @@ class PipelinedEngine(GREngine):
 def make_engine(cfg: ModelConfig, gr: GRConfig, params,
                 trie: Optional[ItemTrie], serve_cfg: ServeConfig,
                 attention_impl: str = "staged",
-                spec: Optional[EngineSpec] = None) -> GREngine:
+                spec: Optional[EngineSpec] = None, mesh=None) -> GREngine:
     """Engine factory honoring ``ServeConfig.executor`` — the single place
     an executor name is interpreted (mirrors ``core.gr_decode.make_backend``
-    for dispatch modes)."""
+    for dispatch modes).  ``mesh`` places the engine on a replica's device
+    slice (DESIGN.md §10); None keeps the exact single-device path."""
     if serve_cfg.executor == "pipelined":
         return PipelinedEngine(cfg, gr, params, trie, serve_cfg,
-                               attention_impl=attention_impl, spec=spec)
+                               attention_impl=attention_impl, spec=spec,
+                               mesh=mesh)
     if serve_cfg.executor != "sequential":
         raise ValueError(f"unknown executor {serve_cfg.executor!r}; "
                          f"have ['sequential', 'pipelined']")
     return GREngine(cfg, gr, params, trie, serve_cfg,
-                    attention_impl=attention_impl, spec=spec)
+                    attention_impl=attention_impl, spec=spec, mesh=mesh)

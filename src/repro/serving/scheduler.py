@@ -80,6 +80,13 @@ class SchedulerPolicy(Protocol):
     # of the runtime-checkable protocol so minimal third-party policies
     # still satisfy ``isinstance``; without it, abort reports failure
     # instead of guessing at queue internals.
+    #
+    # Policies may also implement ``outstanding_tokens() -> int`` (ISSUE 7):
+    # the tokens of work still owed to every request this policy tracks
+    # (queued prompts + unfinished prefill + remaining decode phases).  The
+    # :class:`~repro.serving.replica.ReplicaRouter` uses it as its
+    # least-outstanding load metric; every shipped policy implements it,
+    # and the router falls back to queue depth when a policy does not.
 
 
 POLICIES: Dict[str, Callable[..., SchedulerPolicy]] = {}
@@ -171,6 +178,12 @@ class TokenCapacityBatcher:
             return None
         blen = max(bucket_len(r.prompt_len, self.min_bucket) for r in batch)
         return BatchPlan(requests=batch, bucket_len=blen, formed_s=now_s)
+
+    def outstanding_tokens(self) -> int:
+        """Queued work in prompt tokens (router placement, ISSUE 7).
+        Monolithic batches finish in one dispatch, so queued prompts ARE
+        the outstanding work."""
+        return sum(r.prompt_len for r in self.queue)
 
     def __len__(self):
         return len(self.queue)
@@ -280,6 +293,11 @@ class BucketAffinityBatcher:
             return self._cut(oldest, now_s)
         return None
 
+    def outstanding_tokens(self) -> int:
+        """Queued work in prompt tokens (router placement, ISSUE 7)."""
+        return sum(r.prompt_len
+                   for q in self.buckets.values() for r in q)
+
     def __len__(self):
         return sum(len(q) for q in self.buckets.values())
 
@@ -353,6 +371,21 @@ class ChunkedPrefillScheduler:
         self.waiting = deque(r for r in self.waiting if r.rid != rid)
         self.active = [r for r in self.active if r.rid != rid]
         return len(self.waiting) + len(self.active) != n
+
+    def outstanding_tokens(self) -> int:
+        """Tokens of work still owed across waiting AND active requests
+        (router placement, ISSUE 7): unprefilled prompt tokens plus
+        ``decode_cost`` per remaining decode phase — the same units
+        ``plan_step`` budgets with, so the router's least-outstanding
+        choice matches what the step pipeline will actually run."""
+        nd, dc = self.num_decode_phases, self.decode_cost
+        total = sum(r.prompt_len + nd * dc for r in self.waiting)
+        for r in self.active:
+            if r.phase is Phase.PREFILLING:
+                total += r.prefill_remaining + nd * dc
+            elif r.phase is Phase.DECODING:
+                total += (nd - r.decode_phase) * dc
+        return total
 
     # ------------------------------------------------------ step planning
     def has_work(self) -> bool:

@@ -29,7 +29,8 @@ from repro.config import ServeConfig
 from repro.serving.api import ServingSystem
 from repro.serving.engine import GREngine
 from repro.serving.metrics import beam_pool_summary, cache_summary, \
-    engine_summary, latency_summary, pipeline_summary, ttft_summary
+    engine_summary, latency_summary, pipeline_summary, replica_summary, \
+    ttft_summary
 from repro.serving.request import RequestState
 
 
@@ -54,6 +55,10 @@ class ServerReport:
     #: rate, prefill tokens skipped, spill/restore traffic
     #: (see metrics.cache_summary; ``enabled`` False when the cache is off)
     cache: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: per-replica breakdown (ISSUE 7): queue depth, routed/outstanding
+    #: tokens, dispatches, arena occupancy, sync stall — one dict per
+    #: replica (see metrics.replica_summary); length 1 on unsharded runs
+    replicas: List[Dict[str, float]] = dataclasses.field(default_factory=list)
 
     @property
     def slo_violations(self) -> int:
@@ -63,8 +68,16 @@ class ServerReport:
 
 def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
                min_bucket: int = 64) -> ServerReport:
-    """trace: list of data.synthetic.GRRequest (arrival_s sorted)."""
-    system = ServingSystem(engine, serve_cfg, min_bucket=min_bucket)
+    """trace: list of data.synthetic.GRRequest (arrival_s sorted).
+
+    ``engine`` may also be a prebuilt :class:`ServingSystem` (e.g. from
+    :func:`~repro.serving.replica.make_sharded_system`) — the report then
+    aggregates engine stats across replicas and fills ``replicas`` with the
+    per-replica breakdown."""
+    if isinstance(engine, ServingSystem):
+        system = engine
+    else:
+        system = ServingSystem(engine, serve_cfg, min_bucket=min_bucket)
     for r in sorted(trace, key=lambda r: r.arrival_s):
         system.submit(r.tokens, arrival_s=r.arrival_s, rid=r.rid)
     system.drain()
@@ -73,13 +86,15 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
     lat = [r.latency_s for r in done]
     ttft = [(r.first_beam_s if r.first_beam_s is not None else r.finish_s)
             - r.arrival_s for r in done]
+    stats = system.engine_stats()
     return ServerReport(
         summary=latency_summary(lat, duration),
         requests=done,
-        engine_stats=engine_summary(engine.stats),
+        engine_stats=engine_summary(stats),
         slo_ms=serve_cfg.slo_ms,
         ttft=ttft_summary(ttft),
-        beam_pool=beam_pool_summary(engine.stats),
-        pipeline=pipeline_summary(engine.stats),
-        cache=cache_summary(engine.stats),
+        beam_pool=beam_pool_summary(stats),
+        pipeline=pipeline_summary(stats),
+        cache=cache_summary(stats),
+        replicas=replica_summary(system.replicas),
     )

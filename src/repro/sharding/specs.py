@@ -23,22 +23,36 @@ from repro.config import ModelConfig
 FSDP_THRESHOLD = 8e9          # params; above this, weights shard over 'data'
 
 
+def _axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    # mesh.shape is name->size on both Mesh and AbstractMesh, so the rules
+    # below stay testable without real devices.
+    return dict(mesh.shape)
+
+
 def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    sizes = _axis_sizes(mesh)
+    axes = ("pod", "data") if "pod" in sizes else ("data",)
+    return tuple(a for a in axes if a in sizes)
 
 
 def _mdl(mesh: Mesh, dim: int) -> Optional[str]:
-    """'model' if the dim is divisible by the model-axis size, else None."""
-    size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
-    return "model" if dim % size == 0 else None
+    """'model' if present and the dim divides by its size, else None.
+
+    Meshes without a 'model' axis (pure data-parallel replicas) get fully
+    replicated weights rather than a KeyError.
+    """
+    size = _axis_sizes(mesh).get("model")
+    return "model" if size is not None and dim % size == 0 else None
 
 
 def _fsdp(mesh: Mesh, dim: int, enabled: bool):
     if not enabled:
         return None
     axes = _fsdp_axes(mesh)
-    size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
-                        for a in axes]))
+    if not axes:
+        return None
+    sizes = _axis_sizes(mesh)
+    size = int(np.prod([sizes[a] for a in axes]))
     return axes if dim % size == 0 else None
 
 
@@ -105,8 +119,9 @@ def param_pspecs(cfg: ModelConfig, abstract_params, mesh: Mesh,
 
 def _batch_spec(mesh: Mesh, batch: int, nd: int) -> P:
     axes = _fsdp_axes(mesh)
-    size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
-                        for a in axes]))
+    if not axes:
+        return P(*([None] * nd))
+    size = int(np.prod([_axis_sizes(mesh)[a] for a in axes]))
     lead = axes if batch % size == 0 else None
     return P(*([lead] + [None] * (nd - 1)))
 
@@ -143,8 +158,9 @@ _CACHE_DIMS = {
 
 def cache_pspecs(cfg: ModelConfig, abstract_cache, mesh: Mesh):
     axes = _fsdp_axes(mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    bsize = int(np.prod([sizes[a] for a in axes]))
+    sizes = _axis_sizes(mesh)
+    bsize = int(np.prod([sizes[a] for a in axes])) if axes else 0
+    msize = sizes.get("model")      # absent axis -> caches stay replicated
 
     def rule(path, leaf):
         if not getattr(leaf, "shape", ()):        # scalars (length, step)
@@ -159,13 +175,15 @@ def cache_pspecs(cfg: ModelConfig, abstract_cache, mesh: Mesh):
         if info is None:
             return P(*spec)
         bdim, hdim, sdim = info
-        if leaf.shape[bdim] % bsize == 0:
+        if bsize and leaf.shape[bdim] % bsize == 0:
             spec[bdim] = axes
+        if msize is None:
+            return P(*spec)
         if hdim is not None and hdim < nd \
-                and leaf.shape[hdim] % sizes["model"] == 0:
+                and leaf.shape[hdim] % msize == 0:
             spec[hdim] = "model"
         elif sdim is not None and sdim < nd \
-                and leaf.shape[sdim] % sizes["model"] == 0:
+                and leaf.shape[sdim] % msize == 0:
             spec[sdim] = "model"
         return P(*spec)
 
@@ -178,3 +196,30 @@ def to_shardings(pspec_tree, mesh: Mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspec_tree,
         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Placement helpers for replica engines (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def kv_pool_pspec(mesh: Mesh, shape, head_dim: int) -> P:
+    """TP placement of an engine-owned KV pool (arena pages, per-request
+    unshared beam caches): shard the kv-head dim over 'model' when divisible,
+    replicate everything else — page/batch dims are request-addressed by the
+    scheduler and never mesh-global."""
+    spec = [None] * len(shape)
+    spec[head_dim] = _mdl(mesh, shape[head_dim])
+    return P(*spec)
+
+
+def place_params(cfg: ModelConfig, params, mesh: Mesh,
+                 fsdp: Optional[bool] = None):
+    """device_put the param tree onto ``mesh`` per :func:`param_pspecs`."""
+    specs = param_pspecs(cfg, params, mesh, fsdp)
+    return jax.device_put(params, to_shardings(specs, mesh))
+
+
+def place_inputs(batch_tree, mesh: Mesh):
+    """device_put input arrays onto ``mesh`` per :func:`input_pspecs`."""
+    specs = input_pspecs(batch_tree, mesh)
+    return jax.device_put(batch_tree, to_shardings(specs, mesh))

@@ -1,0 +1,332 @@
+"""Replica-addressable sharded serving (ISSUE 7 tentpole).
+
+Two layers of coverage:
+
+* In-process: router placement / tie-breaking, mesh-slice validation,
+  ``merge_engine_stats``, and multi-replica exactly-once over stub engines —
+  no forced devices needed.
+
+* Subprocess (``@pytest.mark.slow``): the real-engine guarantees that need
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` owning process
+  startup.  The file doubles as its own worker (``python <this file> tp2``):
+    - ``tp2``         TP=2 single replica produces BIT-IDENTICAL beam
+                      selections to the unsharded engine (chunked and
+                      monolithic policies; items exact, log-probs 1e-5)
+    - ``router``      2-replica system completes every request exactly once
+                      with both replicas doing work, through ``run_server``
+                      (per-replica ``ServerReport.replicas`` checked)
+    - ``hypothesis``  property variant of tp2 over random histories
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.config import EngineSpec, ServeConfig
+from repro.launch.mesh import make_host_mesh, make_replica_meshes
+from repro.serving import (EngineStats, Replica, ReplicaRouter, RequestState,
+                           ServingSystem, make_policy, merge_engine_stats,
+                           replica_summary)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# In-process: router, validation, stats merge (stub engines, no devices)
+# ---------------------------------------------------------------------------
+
+class StubEngine:
+    def __init__(self, serve_cfg, dur_s=0.01):
+        self.serve_cfg = serve_cfg
+        self.spec = EngineSpec(backend="graph", num_streams=2)
+        self.stats = EngineStats()
+        self.dur_s = dur_s
+
+    def run_batch(self, plan):
+        self.stats.batches += 1
+        self.stats.dispatches += 1
+        for r in plan.requests:
+            r.items = np.zeros((2, 3), np.int32)
+            r.log_probs = np.zeros(2, np.float32)
+        return {"device_s": self.dur_s, "host_mask_s": 0.0,
+                "critical_s": self.dur_s, "compile_s": 0.0, "dispatches": 1}
+
+
+def _scfg(**kw):
+    base = dict(max_batch_tokens=10**6, max_batch_requests=64,
+                batch_wait_quota_ms=5.0)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def _stub_replicas(n, scfg, policy="token-capacity"):
+    return [Replica(i, StubEngine(scfg), make_policy(policy, scfg, 64))
+            for i in range(n)]
+
+
+def _state(rid, n_tok):
+    return RequestState(rid, np.zeros(n_tok, np.int32), 0.0)
+
+
+def test_router_places_on_least_outstanding_tokens():
+    scfg = _scfg()
+    reps = _stub_replicas(2, scfg)
+    router = ReplicaRouter(reps)
+    s0 = _state(0, 100)
+    assert router.place(s0) is reps[0]
+    reps[0].policy.add(s0, 0.0)
+    # replica 0 now owes 100 tokens -> both small requests go to replica 1
+    for rid in (1, 2):
+        s = _state(rid, 10)
+        rep = router.place(s)
+        assert rep is reps[1]
+        rep.policy.add(s, 0.0)
+    assert router.owner(0) is reps[0]
+    assert router.owner(2) is reps[1]
+    assert router.owner(99) is None
+    assert reps[0].routed_tokens == 100 and reps[1].routed_tokens == 20
+
+
+def test_router_round_robins_when_idle():
+    # equal loads: the routed-tokens tie-break alternates instead of piling
+    # every submit onto replica 0
+    reps = _stub_replicas(2, _scfg())
+    router = ReplicaRouter(reps)
+    picks = [router.place(_state(i, 10)).index for i in range(4)]
+    assert picks == [0, 1, 0, 1]
+
+
+def test_router_requires_replicas():
+    with pytest.raises(ValueError, match="router needs"):
+        ReplicaRouter([])
+
+
+def test_multi_replica_exactly_once_stub():
+    scfg = _scfg(max_batch_tokens=64, max_batch_requests=2)
+    system = ServingSystem(replicas=_stub_replicas(2, scfg), serve_cfg=scfg)
+    handles = [system.submit(np.zeros(32, np.int32), arrival_s=0.001 * i)
+               for i in range(8)]
+    system.drain()
+    rids = [h.result().rid for h in handles]
+    assert sorted(rids) == list(range(8))           # every request, once
+    summary = replica_summary(system.replicas)
+    assert sum(r["submitted"] for r in summary) == 8
+    assert sum(r["completed"] for r in summary) == 8
+    assert all(r["completed"] > 0 for r in summary)  # both replicas worked
+    assert all(r["queue_depth"] == 0 for r in summary)
+    assert all(r["tp"] == 1 and r["devices"] == [] for r in summary)
+
+
+def test_system_rejects_engine_plus_replicas():
+    scfg = _scfg()
+    reps = _stub_replicas(1, scfg)
+    with pytest.raises(ValueError, match="not both"):
+        ServingSystem(engine=StubEngine(scfg), serve_cfg=scfg, replicas=reps)
+
+
+def test_system_rejects_mixed_scheduling_modes():
+    scfg = _scfg(prefill_chunk_tokens=64)
+    reps = [Replica(0, StubEngine(scfg), make_policy("chunked", scfg, 64)),
+            Replica(1, StubEngine(scfg),
+                    make_policy("token-capacity", scfg, 64))]
+    with pytest.raises(ValueError, match="same scheduling mode"):
+        ServingSystem(replicas=reps, serve_cfg=scfg)
+
+
+def test_merge_engine_stats():
+    a, b = EngineStats(), EngineStats()
+    a.dispatches, b.dispatches = 3, 5               # counters sum
+    a.device_s, b.device_s = 1.0, 2.5
+    a.arena_pages, b.arena_pages = 10, 40           # gauges max
+    a.arena_pages_peak, b.arena_pages_peak = 8, 30
+    a.beam_pool_max, b.beam_pool_max = 7, 5
+    a.arena_util_peak, b.arena_util_peak = 0.9, 0.4
+    b.cache_enabled = True                          # or
+    m = merge_engine_stats([a, b])
+    assert m.dispatches == 8 and m.device_s == 3.5
+    assert m.arena_pages == 40 and m.arena_pages_peak == 30
+    assert m.beam_pool_max == 7 and m.arena_util_peak == 0.9
+    assert m.cache_enabled
+
+
+def test_mesh_validation_errors():
+    # in-process jax has a single CPU device (no forced host devices)
+    with pytest.raises(ValueError, match="model_axis"):
+        make_host_mesh(model_axis=3)
+    with pytest.raises(ValueError, match="model_axis"):
+        make_host_mesh(model_axis=0)
+    with pytest.raises(ValueError, match="devices"):
+        make_replica_meshes(num_replicas=4, model_axis=2)
+    meshes = make_replica_meshes(num_replicas=1, model_axis=1)
+    assert len(meshes) == 1
+    assert dict(meshes[0].shape) == {"data": 1, "model": 1}
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: real engines over 8 forced host devices
+# ---------------------------------------------------------------------------
+
+def _run_worker(mode):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), mode],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert f"{mode.upper()} OK" in proc.stdout, proc.stdout + proc.stderr
+
+
+@pytest.mark.slow
+def test_tp2_bit_identical_beam_selection():
+    _run_worker("tp2")
+
+
+@pytest.mark.slow
+def test_two_replica_router_exactly_once():
+    _run_worker("router")
+
+
+@pytest.mark.slow
+def test_tp2_bit_identical_property():
+    _run_worker("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# Worker body (runs under the forced-device XLA flag)
+# ---------------------------------------------------------------------------
+
+def _world(beam=4, items=200):
+    import jax
+    from repro.config import GRConfig
+    from repro.configs import get_config
+    from repro.core import ItemTrie
+    from repro.data import gen_catalog
+    from repro.models import get_model
+    cfg = get_config("onerec-0.1b").reduced()
+    gr = GRConfig(beam_width=beam, top_k=beam, num_decode_phases=3,
+                  num_items=items, tid_vocab=cfg.vocab_size)
+    catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, gr, catalog, trie, params
+
+
+def _compare(ha, hb, tag):
+    for a, b in zip(ha, hb):
+        ra, rb = a.result(), b.result()
+        assert np.array_equal(ra.items, rb.items), \
+            (tag, ra.rid, ra.items, rb.items)
+        np.testing.assert_allclose(ra.log_probs, rb.log_probs, atol=1e-5)
+
+
+def _worker_tp2():
+    import dataclasses
+    import jax
+    from repro.data import gen_histories
+    from repro.serving import make_engine, make_sharded_system
+    assert len(jax.devices()) == 8, jax.devices()
+    cfg, gr, catalog, trie, params = _world()
+    hist = gen_histories(catalog, 6, max_tokens=48, seed=1)
+    for policy in ("token-capacity", "chunked"):
+        scfg = _scfg(max_batch_tokens=1024, max_batch_requests=4,
+                     scheduler_policy=policy, prefill_chunk_tokens=64)
+        ref = ServingSystem(make_engine(cfg, gr, params, trie, scfg), scfg)
+        tp = make_sharded_system(
+            cfg, gr, params, trie,
+            dataclasses.replace(scfg, num_replicas=1, model_axis=2))
+        assert len(tp.replicas) == 1
+        assert len(tp.replicas[0].devices()) == 2
+        ha = [ref.submit(h, arrival_s=0.002 * i, rid=i)
+              for i, h in enumerate(hist)]
+        hb = [tp.submit(h, arrival_s=0.002 * i, rid=i)
+              for i, h in enumerate(hist)]
+        ref.drain()
+        tp.drain()
+        _compare(ha, hb, policy)
+        print(f"tp2[{policy}]: {len(hist)} requests bit-identical")
+    print("TP2 OK")
+
+
+def _worker_router():
+    import dataclasses
+    from repro.data import gen_histories, poisson_trace
+    from repro.serving import make_sharded_system, run_server
+    cfg, gr, catalog, trie, params = _world()
+    hist = gen_histories(catalog, 24, max_tokens=48, seed=3)
+    trace = poisson_trace(hist, rps=300.0, duration_s=0.05, seed=4)
+    assert len(trace) >= 6, len(trace)
+    scfg = _scfg(max_batch_tokens=1024, max_batch_requests=4,
+                 scheduler_policy="chunked", prefill_chunk_tokens=64,
+                 num_replicas=2, model_axis=1)
+    system = make_sharded_system(cfg, gr, params, trie, scfg)
+    report = run_server(system, trace, scfg)
+    assert report.summary["requests"] == len(trace)
+    rids = [r.rid for r in report.requests]
+    assert sorted(rids) == sorted(t.rid for t in trace)     # exactly once
+    assert len(report.replicas) == 2
+    assert sum(r["submitted"] for r in report.replicas) == len(trace)
+    assert sum(r["completed"] for r in report.replicas) == len(trace)
+    for r in report.replicas:
+        assert r["completed"] > 0, report.replicas          # both worked
+        assert r["queue_depth"] == 0
+        assert r["dispatches"] > 0
+    print(f"router: {len(trace)} requests over 2 replicas "
+          f"{[r['completed'] for r in report.replicas]}")
+    print("ROUTER OK")
+
+
+def _worker_hypothesis():
+    from repro.data import gen_histories
+    from repro.launch.mesh import make_replica_meshes
+    from repro.serving import make_engine
+    cfg, gr, catalog, trie, params = _world()
+    scfg = _scfg(max_batch_tokens=1024, max_batch_requests=4,
+                 scheduler_policy="token-capacity")
+    # engines built ONCE (monolithic graph engines hold no per-request
+    # state); fresh policies/systems per example
+    ref_eng = make_engine(cfg, gr, params, trie, scfg)
+    mesh = make_replica_meshes(num_replicas=1, model_axis=2)[0]
+    tp_eng = make_engine(cfg, gr, params, trie, scfg, mesh=mesh)
+
+    def check_one(seed, n):
+        hist = gen_histories(catalog, n, max_tokens=48, seed=seed)
+        ref = ServingSystem(ref_eng, scfg)
+        tp = ServingSystem(
+            replicas=[Replica(0, tp_eng,
+                              make_policy("token-capacity", scfg, 64),
+                              mesh=mesh)],
+            serve_cfg=scfg)
+        ha = [ref.submit(h, rid=i) for i, h in enumerate(hist)]
+        hb = [tp.submit(h, rid=i) for i, h in enumerate(hist)]
+        ref.drain()
+        tp.drain()
+        _compare(ha, hb, f"seed={seed}")
+
+    try:
+        from hypothesis import HealthCheck, given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        # hypothesis absent (same situation test_property.py importorskips):
+        # seeded randomized sweep gives the property coverage regardless
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            check_one(int(rng.integers(0, 2**16)), int(rng.integers(2, 5)))
+    else:
+        @settings(max_examples=5, deadline=None, derandomize=True,
+                  suppress_health_check=list(HealthCheck))
+        @given(seed=st.integers(0, 2**16 - 1), n=st.integers(2, 4))
+        def check(seed, n):
+            check_one(seed, n)
+
+        check()
+    print("HYPOTHESIS OK")
+
+
+if __name__ == "__main__":
+    {"tp2": _worker_tp2,
+     "router": _worker_router,
+     "hypothesis": _worker_hypothesis}[sys.argv[1]]()
