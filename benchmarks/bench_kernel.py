@@ -6,13 +6,19 @@ meaningless), so the derived column carries the v5e roofline model from
 kernels/beam_attn/tune.py: per-step HBM bytes, FLOPs, and the bound each
 variant hits.  The paper's headline (paged is memory-bound with ~93% busy
 memory pipeline; xAttention turns the workload compute-bound) falls out of
-the bytes ratio."""
+the bytes ratio.
+
+Alongside the printed rows, the structured record lands in
+``experiments/bench/kernel_roofline.json`` (``common.write_bench_json``),
+including the ISSUE 8 paged-kernel column: the HBM bytes the in-place
+page-table read saves per decode dispatch versus materializing the
+gathered contiguous (L, R, MP*pg, kvH, hd) pool view."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench_json
 from repro.kernels.beam_attn.tune import HBM_BW, PEAK_FLOPS, cost_model
 
 
@@ -38,9 +44,25 @@ def analyze(S, BW, H, kvH, hd, layers):
     }
 
 
+def gather_saved(S, R, kvH, hd, layers, page_tokens=64):
+    """HBM bytes per decode dispatch the paged kernel never moves: the
+    staged path gathers the pool into a contiguous f32 view (one write,
+    then one read by attention); the kernel reads pool tiles in place."""
+    MP = -(-S // page_tokens)                   # ceil: pages per request
+    view_bytes = layers * R * MP * page_tokens * kvH * hd * 4 * 2  # K and V
+    return {
+        "view_bytes_per_dispatch": 2 * view_bytes,   # write + re-read
+        "kernel_bytes_per_dispatch": view_bytes,     # in-place single read
+        "saved_bytes_per_dispatch": view_bytes,
+        "saved_fraction": 0.5,
+    }
+
+
 def main():
     H = kvH = 12
     hd, layers = 64, 12                        # onerec-0.1b class
+    record = {"model": "HBM_BW/PEAK_FLOPS v5e roofline", "fig17": [],
+              "tune_blocks": {}, "paged_gather_savings": []}
     for (BS_note, S, BW) in [("L1k", 1024, 128), ("L1k", 1024, 512),
                              ("L2k", 2048, 128), ("L2k", 2048, 512)]:
         a = analyze(S, BW, H, kvH, hd, layers)
@@ -52,6 +74,12 @@ def main():
             f";mem_busy={a['p_busy']*100:.0f}%")
         row(f"fig17_speedup_{BS_note}_bw{BW}", 0.0,
             f"latency_ratio={a['p_ms']/a['x_ms']:.1f}x")
+        record["fig17"].append(
+            {"case": BS_note, "S": S, "BW": BW,
+             "speedup": a["p_ms"] / a["x_ms"], **a})
+        record["paged_gather_savings"].append(
+            {"case": BS_note, "S": S, "R": 8,
+             **gather_saved(S, 8, kvH, hd, layers)})
 
     # block-shape cost table (the tune.py "CG partition" analogue)
     for S in (1024, 32768):
@@ -61,6 +89,12 @@ def main():
             f"chosen={bs};" + ";".join(
                 f"b{k}={v.cost_s*1e6:.0f}us/{v.bound}"
                 for k, v in tab.items()))
+        record["tune_blocks"][f"S{S}"] = {
+            "chosen": bs,
+            "costs_us": {str(k): v.cost_s * 1e6 for k, v in tab.items()},
+        }
+    path = write_bench_json("kernel_roofline", record)
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

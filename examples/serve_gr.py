@@ -10,6 +10,18 @@ Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
       [--executor sequential|pipelined]   (chunked-step executor, DESIGN §8:
                                   pipelined = batched same-phase decode over
                                   the paged KV arena, one sync per step)
+      [--attn-impl staged|paged|kernel]   (decode attention, DESIGN §11:
+                                  kernel = fused Pallas beam attention; with
+                                  the pipelined arena path it reads the page
+                                  pool in place through a scalar-prefetched
+                                  page table — no gathered contiguous view.
+                                  Interpret mode is auto-detected: on CPU
+                                  containers the kernel interprets, on a TPU
+                                  backend it compiles for the hardware)
+      [--early-term]   (on-device early-termination beam select, DESIGN §11:
+                        prune stage-2 candidates below the running global
+                        bar; bit-identical selections, pruning stats in the
+                        beam-pool report line)
       [--prefix-cache]   (cross-request KV prefix reuse, DESIGN §9; chunked
                           policy only — warm prompts skip cached prefill)
       [--host-spill-mb 64]   (host-RAM budget for evicted cache pages)
@@ -52,6 +64,17 @@ def main():
                     choices=["dense", "sparse"],
                     help="dense (R,BW,V)-mask vs sparse trie-gather "
                          "beam expansion (selection-identical)")
+    ap.add_argument("--attn-impl", default="",
+                    choices=["", "staged", "paged", "kernel"],
+                    help="decode attention implementation; 'kernel' runs "
+                         "the fused Pallas beam-attention (paged, in-place "
+                         "over the arena pool on the pipelined path); "
+                         "empty keeps the pipeline default")
+    ap.add_argument("--early-term", action="store_true",
+                    help="on-device early-termination beam select: floor "
+                         "stage-2 candidates below the running global bar "
+                         "(bit-identical selections; pruning stats "
+                         "reported)")
     ap.add_argument("--executor", default="sequential",
                     choices=["sequential", "pipelined"],
                     help="chunked-step executor: pipelined fuses same-phase "
@@ -107,8 +130,12 @@ def main():
                        prefix_cache=args.prefix_cache,
                        host_spill_bytes=args.host_spill_mb << 20,
                        num_replicas=args.replicas,
-                       model_axis=args.model_axis)
+                       model_axis=args.model_axis,
+                       attention_impl=args.attn_impl,
+                       beam_early_term=args.early_term)
     spec = dataclasses.replace(spec, beam_select=args.beam_select)
+    if args.attn_impl:
+        spec = dataclasses.replace(spec, attention_impl=args.attn_impl)
 
     # --- the online request loop: submit -> step -> drain ------------------
     if args.replicas > 1 or args.model_axis > 1:
@@ -146,6 +173,11 @@ def main():
     print(f"  beam pool  : {args.beam_select}, mean {bp['mean_pool']:.0f} / "
           f"max {bp['max_pool']} candidates per beam, "
           f"sort work saved {bp['saved_fraction']*100:.0f}%")
+    if bp["early_term"]:
+        print(f"  early term : pruned {bp['pruned_candidates']}/"
+              f"{bp['scanned_candidates']} stage-2 candidates "
+              f"({bp['pruned_fraction']*100:.0f}%) on device, "
+              f"selections bit-identical")
     if args.policy == "chunked":
         pl = pipeline_summary(stats)
         print(f"  executor   : {args.executor}, decode group width "

@@ -223,6 +223,13 @@ class GRConfig:
     #:              tables) and Top-K over the (R, BW, max_fanout) pool;
     #:              selection-equivalent to "dense", requires an ItemTrie
     beam_select: str = "dense"
+    #: on-device early-termination select (paper §6 Fig 11, DESIGN.md §11):
+    #: between the two top-k stages, compute the running global bar (BW-th
+    #: best so far across per-beam descending top-K columns) and floor
+    #: candidates strictly below it before the stage-2 sort.  Selection is
+    #: bit-identical; pruning counts surface as ``BeamState.pruned`` and in
+    #: ``ServerReport.beam_pool``.
+    beam_early_term: bool = False
 
 
 @dataclass(frozen=True)
@@ -293,6 +300,15 @@ class ServeConfig:
     #: heads and FFN hidden shard per sharding/specs.py.  1 with
     #: num_replicas=1 keeps the exact unsharded single-device code path.
     model_axis: int = 1
+    #: attention implementation override for engines built without an
+    #: explicit EngineSpec (ISSUE 8): "" keeps the caller/spec default;
+    #: "staged"/"paged"/"kernel" force that path.  "kernel" + the pipelined
+    #: arena path runs the fused paged Pallas kernel — decode reads the
+    #: page pool in place, no gathered contiguous view (DESIGN.md §11).
+    attention_impl: str = ""
+    #: enable GRConfig.beam_early_term on the engine's beam select
+    #: (bit-identical selections; pruning stats in ServerReport.beam_pool)
+    beam_early_term: bool = False
 
 
 @dataclass(frozen=True)
@@ -324,9 +340,12 @@ class EngineSpec:
     @classmethod
     def from_serve_config(cls, serve_cfg: "ServeConfig",
                           attention_impl: str = "staged") -> "EngineSpec":
-        """Map the legacy ``graph_dispatch`` flag onto a backend name."""
+        """Map the legacy ``graph_dispatch`` flag onto a backend name.
+
+        ``ServeConfig.attention_impl`` (when non-empty) wins over the
+        ``attention_impl`` argument, mirroring ``beam_select``."""
         return cls(backend="graph" if serve_cfg.graph_dispatch else "eager",
-                   attention_impl=attention_impl,
+                   attention_impl=serve_cfg.attention_impl or attention_impl,
                    num_streams=serve_cfg.num_streams,
                    host_overlap=serve_cfg.num_streams > 1,
                    beam_select=serve_cfg.beam_select)

@@ -245,10 +245,20 @@ class GRDecoder:
                                     jax.Array, jax.Array]:
         """Decode phase ``d`` attending through page tables.
 
-        The batched group's shared KV is gathered from the arena into the
-        contiguous view a :class:`SeparatedCache` holds, then the ordinary
-        :meth:`beam_phase` runs — one dispatch for the whole same-phase
-        group.  Returns (state, parent, unshared_k, unshared_v)."""
+        With ``attention_impl="kernel"`` the fused paged Pallas kernel reads
+        the pool tile-by-tile through the scalar-prefetched page table — no
+        contiguous (R, S, kvH, hd) view is ever materialized (DESIGN.md
+        §11).  Otherwise the group's shared KV is gathered from the arena
+        into the contiguous view a :class:`SeparatedCache` holds and the
+        ordinary :meth:`beam_phase` runs.  Either way it is one dispatch
+        for the whole same-phase group.  Returns
+        (state, parent, unshared_k, unshared_v)."""
+        if self.attention_impl == "kernel":
+            logits, uk, uv = self.decode_step_paged(
+                params, state.tokens[:, :, d - 1], parent, pages_k, pages_v,
+                table, shared_len, unshared_k, unshared_v, jnp.int32(d - 1))
+            state, parent = self._beam_select(state, logits, d)
+            return state, parent, uk, uv
         cache = SeparatedCache(
             shared_k=gather_pages(pages_k, table),
             shared_v=gather_pages(pages_v, table),
@@ -268,25 +278,33 @@ class GRDecoder:
             return beam_attention(q, sk, sv, slen, uk, uv, dstep)
         return staged_beam_attention(q, sk, sv, slen, uk, uv, dstep)
 
-    def decode_step(self, params, prev_tokens: jax.Array, parent: jax.Array,
-                    cache: SeparatedCache
-                    ) -> Tuple[jax.Array, SeparatedCache]:
-        """One decode phase.
+    def _decode_forward(self, params, prev_tokens: jax.Array,
+                        parent: jax.Array, kv_xs: tuple, attend,
+                        shared_len: jax.Array, dstep: jax.Array,
+                        unshared_k: jax.Array, unshared_v: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Shared decode-phase transformer body (one token per beam).
 
-        prev_tokens : (R, BW) tokens selected by the preceding beam phase
-        parent      : (R, BW) beam fork indices from that phase
-        Returns (logits (R, BW, V), updated cache)."""
-        cfg, gr = self.cfg, self.gr
+        ``kv_xs`` are per-layer scanned arrays holding the shared KV in
+        whatever physical form the caller keeps it — contiguous
+        (L, R, S, kvH, hd) slices or (L, P, pg, kvH, hd) arena pools —
+        and ``attend(q, shared_layer_kv, uk, uv)`` computes attention
+        against that form (``shared_layer_kv`` is the per-layer slice tuple
+        of ``kv_xs``).  Returns (logits (R, BW, V), forked+appended
+        unshared_k/v)."""
+        cfg = self.cfg
         R, BW = prev_tokens.shape
-        dstep = cache.step                       # unshared slot to write
         x = params["embed"][prev_tokens]         # (R, BW, d)
         hd = cfg.resolved_head_dim
         rot = int(hd * cfg.rope_fraction) & ~1
-        pos = (cache.shared_len + dstep)[:, None]          # (R,1)
+        pos = (shared_len + dstep)[:, None]                # (R,1)
         cos, sin = rope_angles(pos, rot, cfg.rope_theta)
+        n_kv = len(kv_xs)
 
         def layer_body(h, xs):
-            lp, sk, sv, uk, uv = xs
+            lp = xs[0]
+            skv = xs[1:1 + n_kv]
+            uk, uv = xs[1 + n_kv], xs[2 + n_kv]
             hn = apply_norm(lp["ln1"], h, cfg.norm_kind, cfg.norm_eps)
             q, k, v = gqa_qkv(lp["attn"], hn, cfg)
             if cfg.rope_kind == "rope":
@@ -300,7 +318,7 @@ class GRDecoder:
                 uk, k[:, :, None].astype(uk.dtype), dstep, axis=2)
             uv = jax.lax.dynamic_update_slice_in_dim(
                 uv, v[:, :, None].astype(uv.dtype), dstep, axis=2)
-            a = self._attend(q, sk, sv, cache.shared_len, uk, uv, dstep)
+            a = attend(q, skv, uk, uv)
             h = h + dense(a.reshape(R, BW, -1), lp["attn"]["wo"])
             h = h + apply_mlp(lp["mlp"],
                               apply_norm(lp["ln2"], h, cfg.norm_kind,
@@ -309,13 +327,57 @@ class GRDecoder:
 
         x, (uk, uv) = jax.lax.scan(
             layer_body, x,
-            (params["dense_layers"], cache.shared_k, cache.shared_v,
-             cache.unshared_k, cache.unshared_v))
+            (params["dense_layers"],) + tuple(kv_xs)
+            + (unshared_k, unshared_v))
         x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
         logits = self.model._logits(params, x).astype(jnp.float32)
+        return logits, uk, uv
+
+    def decode_step(self, params, prev_tokens: jax.Array, parent: jax.Array,
+                    cache: SeparatedCache
+                    ) -> Tuple[jax.Array, SeparatedCache]:
+        """One decode phase.
+
+        prev_tokens : (R, BW) tokens selected by the preceding beam phase
+        parent      : (R, BW) beam fork indices from that phase
+        Returns (logits (R, BW, V), updated cache)."""
+        dstep = cache.step                       # unshared slot to write
+
+        def attend(q, skv, uk, uv):
+            return self._attend(q, skv[0], skv[1], cache.shared_len,
+                                uk, uv, dstep)
+
+        logits, uk, uv = self._decode_forward(
+            params, prev_tokens, parent, (cache.shared_k, cache.shared_v),
+            attend, cache.shared_len, dstep, cache.unshared_k,
+            cache.unshared_v)
         new_cache = dataclasses.replace(cache, unshared_k=uk, unshared_v=uv,
                                         step=dstep + 1)
         return logits, new_cache
+
+    def decode_step_paged(self, params, prev_tokens: jax.Array,
+                          parent: jax.Array, pages_k: jax.Array,
+                          pages_v: jax.Array, table: jax.Array,
+                          shared_len: jax.Array, unshared_k: jax.Array,
+                          unshared_v: jax.Array, dstep: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """One decode phase reading the shared prefix straight out of the
+        arena page pool via the fused paged Pallas kernel (DESIGN.md §11).
+
+        pages_k/v : (L, P, pg, kvH, hd) physical page pool (the layer axis
+                    is scanned, so the kernel sees one (P, pg, kvH, hd)
+                    slice per layer)
+        table     : (R, MP) int32 page tables (OOB sentinel for unmapped)
+        Returns (logits (R, BW, V), forked+appended unshared_k/v)."""
+        from repro.kernels.beam_attn.ops import arena_beam_attention_kernel
+
+        def attend(q, skv, uk, uv):
+            return arena_beam_attention_kernel(q, skv[0], skv[1], table,
+                                               shared_len, uk, uv, dstep)
+
+        return self._decode_forward(params, prev_tokens, parent,
+                                    (pages_k, pages_v), attend, shared_len,
+                                    dstep, unshared_k, unshared_v)
 
     # ------------------------------------------------- stepwise decode API
     # One beam phase at a time, so the serving engine can interleave decode
@@ -338,6 +400,19 @@ class GRDecoder:
                  if self.trie is not None else jnp.float32(0.0))
         return xbeam.beam_step(state, logits, mask0, gr)
 
+    def _beam_select(self, state: xbeam.BeamState, logits: jax.Array,
+                     d: int) -> Tuple[xbeam.BeamState, jax.Array]:
+        """Phase-``d`` beam expansion over fresh decode logits: sparse
+        trie-gather or dense mask-and-sort, per ``GRConfig.beam_select``."""
+        if self._sparse:
+            toks, cids = self.trie.device_children(d)
+            return xbeam.sparse_beam_step(state, logits, toks, cids, self.gr)
+        if self.trie is not None:
+            mask = self.trie.device_masks(d, state.tokens[:, :, :d])
+        else:
+            mask = jnp.float32(0.0)
+        return xbeam.beam_step(state, logits, mask, self.gr)
+
     def beam_phase(self, params, state: xbeam.BeamState, parent: jax.Array,
                    cache: SeparatedCache, d: int
                    ) -> Tuple[xbeam.BeamState, jax.Array, SeparatedCache]:
@@ -348,16 +423,7 @@ class GRDecoder:
         the trie over the d-token prefixes."""
         logits, cache = self.decode_step(params, state.tokens[:, :, d - 1],
                                          parent, cache)
-        if self._sparse:
-            toks, cids = self.trie.device_children(d)
-            state, parent = xbeam.sparse_beam_step(state, logits, toks,
-                                                   cids, self.gr)
-            return state, parent, cache
-        if self.trie is not None:
-            mask = self.trie.device_masks(d, state.tokens[:, :, :d])
-        else:
-            mask = jnp.float32(0.0)
-        state, parent = xbeam.beam_step(state, logits, mask, self.gr)
+        state, parent = self._beam_select(state, logits, d)
         return state, parent, cache
 
     def decode_from_prefill(self, params, logits0: jax.Array,
@@ -368,7 +434,10 @@ class GRDecoder:
         for d in range(1, self.gr.num_decode_phases):
             state, parent, cache = self.beam_phase(params, state, parent,
                                                    cache, d)
-        return {"items": state.tokens, "log_probs": state.log_probs}
+        out = {"items": state.tokens, "log_probs": state.log_probs}
+        if state.pruned is not None:
+            out["pruned"] = state.pruned
+        return out
 
     # ------------------------------------------------------------ generate
     def backend(self, mode: str) -> "ExecutionBackend":
@@ -612,6 +681,8 @@ class EagerBackend:
             critical_s += bs_dt
             dispatches += 1
         out = {"items": state.tokens, "log_probs": state.log_probs}
+        if state.pruned is not None:
+            out["pruned"] = state.pruned
         return out, {"device_s": device_s, "host_mask_s": host_s,
                      "critical_s": critical_s, "compile_s": compile_s,
                      "dispatches": dispatches}

@@ -55,16 +55,21 @@ class BeamState:
                  -1 = dead beam).  Maintained by ``sparse_beam_step`` so
                  phase d is one table row lookup instead of re-walking the
                  trie; carried untouched (may be None) on the dense path.
+    pruned     : (R,) int32 — cumulative count of stage-2 candidates the
+                 on-device early-termination bar pruned for this request
+                 (``GRConfig.beam_early_term``); carried untouched (may be
+                 None) when the prune is off.
     """
 
     tokens: jax.Array
     log_probs: jax.Array
     step: jax.Array
     prefix_ids: Optional[jax.Array] = None
+    pruned: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return ((self.tokens, self.log_probs, self.step, self.prefix_ids),
-                None)
+        return ((self.tokens, self.log_probs, self.step, self.prefix_ids,
+                 self.pruned), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -79,13 +84,62 @@ def init_beam_state(requests: int, gr: GRConfig,
         return BeamState(jax.ShapeDtypeStruct(shape_tok, jnp.int32),
                          jax.ShapeDtypeStruct(shape_lp, jnp.float32),
                          jax.ShapeDtypeStruct((), jnp.int32),
-                         jax.ShapeDtypeStruct(shape_lp, jnp.int32))
+                         jax.ShapeDtypeStruct(shape_lp, jnp.int32),
+                         jax.ShapeDtypeStruct((requests,), jnp.int32))
     # beam 0 is the live beam at step 0 (all beams share the prompt); the
     # -inf tail keeps duplicates out of the first global top-BW
     lp = jnp.full(shape_lp, -jnp.inf, jnp.float32).at[:, 0].set(0.0)
     # every beam starts at the trie root (compact id 0)
     return BeamState(jnp.zeros(shape_tok, jnp.int32), lp, jnp.int32(0),
-                     jnp.zeros(shape_lp, jnp.int32))
+                     jnp.zeros(shape_lp, jnp.int32),
+                     jnp.zeros((requests,), jnp.int32))
+
+
+def early_term_prune(v1: jax.Array, bw: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """On-device analogue of the Fig 11 heap's per-beam early termination
+    (paper §6, DESIGN.md §11), applied between the two top-k stages.
+
+    ``v1`` is the (R, BW, K) stage-1 output: per-beam candidate values,
+    **descending along K**.  The heap walks column-major and stops a beam
+    once its next candidate falls below the heap minimum — the "global bar".
+    Vectorized: ``bar[j]`` = the BW-th best value among columns 0..j
+    (a prefix top-BW merge via ``lax.associative_scan``; top-BW of a
+    multiset union is associative), and candidate (b, j) is *visited* iff
+    ``v1[b, j] >= bar[j-1]``.  Everything else is floored to -inf before
+    the stage-2 ``lax.top_k``.
+
+    Selection-bit-identity: a pruned value is STRICTLY below ``bar[j-1]``,
+    and ``bar`` is nondecreasing in candidates, so it is strictly below the
+    final global bar (the BW-th best overall) — it could never have entered
+    the top-BW, under any tie-break.  All surviving values are unchanged,
+    so stage 2 sees the same winners in the same order.
+
+    Returns (v1 with pruned entries at -inf, pruned count (R,) int32).
+    """
+    R, BW, K = v1.shape
+    if K <= 1:
+        return v1, jnp.zeros((R,), jnp.int32)
+    cols = jnp.moveaxis(v1, 2, 0)                        # (K, R, BW)
+    # associative_scan emits element 0 UNMERGED, so every scan input must
+    # already be in canonical (descending) form — sort each column first.
+    cols = jax.lax.top_k(cols, bw)[0]
+
+    def merge(a, b):
+        return jax.lax.top_k(jnp.concatenate([a, b], axis=-1), bw)[0]
+
+    prefix = jax.lax.associative_scan(merge, cols)       # (K, R, BW) desc
+    bar = jnp.moveaxis(prefix[:-1, :, -1], 0, 1)         # (R, K-1)
+    visited = v1[:, :, 1:] >= bar[:, None, :]            # col 0 always visited
+    pruned = jnp.sum(~visited, axis=(1, 2)).astype(jnp.int32)
+    v1 = v1.at[:, :, 1:].set(jnp.where(visited, v1[:, :, 1:], -jnp.inf))
+    return v1, pruned
+
+
+def _accumulate_pruned(state: BeamState, n: jax.Array) -> Optional[jax.Array]:
+    if state.pruned is None:
+        return None
+    return state.pruned + n
 
 
 def beam_step(state: BeamState, logits: jax.Array, mask: jax.Array,
@@ -105,6 +159,10 @@ def beam_step(state: BeamState, logits: jax.Array, mask: jax.Array,
 
     # stage 1: per-beam Top-K (the paper's per-beam descending lists)
     v1, i1 = jax.lax.top_k(cand, K)                       # (R, BW, K)
+    pruned = state.pruned
+    if gr.beam_early_term:
+        v1, n = early_term_prune(v1, BW)
+        pruned = _accumulate_pruned(state, n)
     # stage 2: global Top-BW over the BW*K pool (early-termination analogue)
     v2, i2 = jax.lax.top_k(v1.reshape(R, BW * K), BW)     # (R, BW)
     parent = (i2 // K).astype(jnp.int32)
@@ -115,7 +173,7 @@ def beam_step(state: BeamState, logits: jax.Array, mask: jax.Array,
     tokens = jax.lax.dynamic_update_index_in_dim(
         tokens, token, state.step, axis=2)
     new = BeamState(tokens=tokens, log_probs=v2, step=state.step + 1,
-                    prefix_ids=state.prefix_ids)
+                    prefix_ids=state.prefix_ids, pruned=pruned)
     return new, parent
 
 
@@ -170,6 +228,10 @@ def sparse_beam_step(state: BeamState, logits: jax.Array,
     # stage 1: per-beam Top-K over the fanout slots (token-ascending rows,
     # so ties break exactly like the dense path's token order)
     v1, i1 = jax.lax.top_k(cand, K)                             # (R, BW, K)
+    pruned = state.pruned
+    if gr.beam_early_term:
+        v1, n = early_term_prune(v1, BW)
+        pruned = _accumulate_pruned(state, n)
     # stage 2: global Top-BW over the BW*K pool
     v2, i2 = jax.lax.top_k(v1.reshape(R, BW * K), BW)           # (R, BW)
     parent = (i2 // K).astype(jnp.int32)
@@ -183,7 +245,7 @@ def sparse_beam_step(state: BeamState, logits: jax.Array,
     tokens = jax.lax.dynamic_update_index_in_dim(
         tokens, jnp.maximum(token, 0), state.step, axis=2)
     new = BeamState(tokens=tokens, log_probs=v2, step=state.step + 1,
-                    prefix_ids=new_pid)
+                    prefix_ids=new_pid, pruned=pruned)
     return new, parent
 
 

@@ -17,6 +17,19 @@ hierarchy (DESIGN.md §2):
 
 Grid: (R, kvH, nS + 1) — the innermost axis walks shared-KV tiles and ends
 with one unshared+finalize step.  Scratch persists across the innermost axis.
+
+Two shared-stage variants live here:
+
+  * ``beam_attention_kernel`` — the prefix is a contiguous (R, kvH, S, hd)
+    buffer; tiles are (block_s, hd) row slices.
+  * ``paged_beam_attention_kernel`` — the prefix lives in the serving
+    arena's page pool (P, page_tokens, kvH, hd) and is addressed through a
+    **scalar-prefetched page table**: the shared-stage BlockSpec index map
+    reads ``table[r, s]`` out of SMEM to pick which pool page the next tile
+    DMA fetches, so decode never materializes the gathered (R, S, kvH, hd)
+    view (DESIGN.md §11).  Unmapped tail entries must be pre-redirected to
+    page 0 (``gather_pages``' sentinel rule); the ``shared_len`` column mask
+    makes their contribution exactly zero.
 """
 
 from __future__ import annotations
@@ -30,6 +43,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def _clamp_idx(s, n):
+    """Clamp a tile index to [0, n-1]; with n == 0 (empty shared grid) the
+    finalize step still needs *some* in-bounds block to name."""
+    return jnp.maximum(jnp.minimum(s, n - 1), 0)
 
 
 def _kernel(slen_ref, step_ref,          # scalar-prefetch style (1,1) blocks
@@ -124,8 +143,17 @@ def beam_attention_kernel(q, shared_k, shared_v, shared_len,
     S = shared_k.shape[2]
     BW, ND = unshared_k.shape[2], unshared_k.shape[3]
     G = M // BW
-    block_s = min(block_s, S)
-    n_s = pl.cdiv(S, block_s)
+    if S == 0:
+        # Empty prefix (e.g. decode before any prefill landed): skip the
+        # shared stage entirely with an empty tile grid.  The zero-size
+        # buffers are padded to one dummy tile so the BlockSpec stays
+        # well-formed; n_s == 0 means it is never read.
+        shared_k = jnp.zeros((R, kvH, 1, hd), shared_k.dtype)
+        shared_v = jnp.zeros((R, kvH, 1, hd), shared_v.dtype)
+        block_s, n_s = 1, 0
+    else:
+        block_s = min(block_s, S)
+        n_s = pl.cdiv(S, block_s)
     grid = (R, kvH, n_s + 1)
 
     slen = shared_len.reshape(R, 1).astype(jnp.int32)
@@ -141,9 +169,9 @@ def beam_attention_kernel(q, shared_k, shared_v, shared_len,
             pl.BlockSpec((1, 1), lambda r, h, s: (0, 0)),            # step
             pl.BlockSpec((1, 1, M, hd), lambda r, h, s: (r, h, 0, 0)),   # q
             pl.BlockSpec((1, 1, block_s, hd),
-                         lambda r, h, s: (r, h, jnp.minimum(s, n_s - 1), 0)),
+                         lambda r, h, s: (r, h, _clamp_idx(s, n_s), 0)),
             pl.BlockSpec((1, 1, block_s, hd),
-                         lambda r, h, s: (r, h, jnp.minimum(s, n_s - 1), 0)),
+                         lambda r, h, s: (r, h, _clamp_idx(s, n_s), 0)),
             pl.BlockSpec((1, 1, BW, ND, hd), lambda r, h, s: (r, h, 0, 0, 0)),
             pl.BlockSpec((1, 1, BW, ND, hd), lambda r, h, s: (r, h, 0, 0, 0)),
         ],
@@ -156,3 +184,150 @@ def beam_attention_kernel(q, shared_k, shared_v, shared_len,
         ],
         interpret=interpret,
     )(slen, step_arr, q, shared_k, shared_v, unshared_k, unshared_v)
+
+
+def _paged_kernel(tbl_ref, slen_ref, step_ref,   # scalar prefetch (SMEM)
+                  q_ref, pk_ref, pv_ref, uk_ref, uv_ref,
+                  out_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, scale: float, page_tokens: int, n_pages: int,
+                  bw: int, g: int, nd: int):
+    r = pl.program_id(0)
+    s_idx = pl.program_id(2)
+    M = q_ref.shape[2]
+    hd = q_ref.shape[3]
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (M, hd)
+
+    @pl.when(s_idx < n_pages)
+    def _shared_stage():
+        # the BlockSpec index map already routed this tile to pool page
+        # table[r, s_idx]; the block is (1, page_tokens, 1, hd)
+        k = pk_ref[0, :, 0, :].astype(jnp.float32)       # (page_tokens, hd)
+        v = pv_ref[0, :, 0, :].astype(jnp.float32)
+        slen = slen_ref[r]
+        row = s_idx * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, (v.shape[0], 1), 0)
+        v = jnp.where(row < slen, v, 0.0)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (M, page_tokens)
+        col = s_idx * page_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, (M, page_tokens), 1)
+        valid = col < slen
+        scores = jnp.where(valid, scores, NEG_INF)
+
+        m_prev = m_scr[...]                              # (M, 1)
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(s_idx == n_pages)
+    def _unshared_and_finalize():
+        uk = uk_ref[0, 0].astype(jnp.float32)            # (BW, ND, hd)
+        uv = uv_ref[0, 0].astype(jnp.float32)
+        qb = q.reshape(bw, g, hd)
+        scores = jax.lax.dot_general(
+            qb, uk, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale  # (BW, G, ND)
+        ncol = jax.lax.broadcasted_iota(jnp.int32, (bw, g, nd), 2)
+        uvalid = (ncol <= step_ref[0]).reshape(M, nd)
+        scores = jnp.where(uvalid, scores.reshape(M, nd), NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(uvalid, jnp.exp(scores - m_new), 0.0)  # (M, ND)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pb = p.reshape(bw, g, nd)
+        o2 = jax.lax.dot_general(
+            pb, uv, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(M, hd)
+        acc = acc_scr[...] * alpha + o2
+        out_ref[0, 0] = (acc / jnp.maximum(l_new, 1e-30)).astype(out_ref.dtype)
+
+
+def paged_beam_attention_kernel(q, pages_k, pages_v, table, shared_len,
+                                unshared_k, unshared_v, step,
+                                *, scale: float, interpret: bool = True):
+    """Kernel-layout beam attention reading the shared prefix straight out
+    of the arena page pool (no gathered contiguous view).
+
+    q            : (R, kvH, M, hd)   M = BW*G
+    pages_k/v    : (P, page_tokens, kvH, hd)  — the pool, read in place
+    table        : (R, MP) int32 page ids, **pre-clamped** so every entry
+                   (mapped or sentinel) is a valid pool index (< P);
+                   sentinel tails follow ``gather_pages``' page-0 redirect
+                   and are zeroed by the shared_len mask
+    shared_len   : (R,) int32
+    unshared_k/v : (R, kvH, BW, ND, hd)
+    step         : () int32
+    -> (R, kvH, M, hd) float32
+
+    Grid (R, kvH, MP + 1): the innermost axis walks page tiles — the
+    BlockSpec index map dereferences the scalar-prefetched ``table`` to pick
+    each tile's pool page — then runs one unshared+finalize step.  MP == 0
+    degenerates to unshared-only attention.
+    """
+    R, kvH, M, hd = q.shape
+    P, pg = pages_k.shape[0], pages_k.shape[1]
+    BW, ND = unshared_k.shape[2], unshared_k.shape[3]
+    G = M // BW
+    MP = table.shape[1]
+    if MP == 0:
+        # no mapped pages anywhere: keep the table BlockSpec well-formed
+        # with a single dummy column (never dereferenced past clamping)
+        table = jnp.zeros((R, 1), jnp.int32)
+    n_pages = MP
+    grid = (R, kvH, n_pages + 1)
+
+    tbl = table.astype(jnp.int32)
+    slen = shared_len.reshape(R).astype(jnp.int32)
+    step_arr = step.astype(jnp.int32).reshape(1)
+
+    kern = functools.partial(_paged_kernel, scale=scale, page_tokens=pg,
+                             n_pages=n_pages, bw=BW, g=G, nd=ND)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                    # table, shared_len, step
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, M, hd),
+                         lambda r, h, s, tbl, slen, stp: (r, h, 0, 0)),
+            pl.BlockSpec((1, pg, 1, hd),
+                         lambda r, h, s, tbl, slen, stp:
+                         (tbl[r, _clamp_idx(s, n_pages)], 0, h, 0)),
+            pl.BlockSpec((1, pg, 1, hd),
+                         lambda r, h, s, tbl, slen, stp:
+                         (tbl[r, _clamp_idx(s, n_pages)], 0, h, 0)),
+            pl.BlockSpec((1, 1, BW, ND, hd),
+                         lambda r, h, s, tbl, slen, stp: (r, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, BW, ND, hd),
+                         lambda r, h, s, tbl, slen, stp: (r, h, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, M, hd),
+                               lambda r, h, s, tbl, slen, stp: (r, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((M, 1), jnp.float32),     # running max
+            pltpu.VMEM((M, 1), jnp.float32),     # running sum
+            pltpu.VMEM((M, hd), jnp.float32),    # unnormalized acc
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, kvH, M, hd), jnp.float32),
+        interpret=interpret,
+    )(tbl, slen, step_arr, q, pages_k, pages_v, unshared_k, unshared_v)

@@ -1,16 +1,19 @@
-"""Jit'd public wrapper for the beam shared-prefix attention kernel.
+"""Jit'd public wrappers for the beam shared-prefix attention kernels.
 
-Accepts the engine layout used by ``repro.core.xattention`` and handles the
+Accept the engine layout used by ``repro.core.xattention`` and handle the
 kernel's beams-major rearrangement:
 
   q            : (R, BW, H, hd)
-  shared_k/v   : (R, S, kvH, hd)
+  shared_k/v   : (R, S, kvH, hd)        (contiguous variant)
+  pages_k/v    : (P, page_tokens, kvH, hd) + table (R, MP)  (paged variant)
   shared_len   : (R,)
   unshared_k/v : (R, BW, ND, kvH, hd)
   step         : () int32
 
-On CPU containers the kernel always runs in interpret mode (TPU is the
-target, not the runtime); on a real TPU backend set ``interpret=False``.
+``interpret=None`` (the default) auto-detects the runtime: Pallas lowers to
+Mosaic only on a TPU backend, so on CPU/GPU containers the kernel runs in
+interpret mode and on a real TPU it compiles for the hardware.  Pass an
+explicit bool to override (e.g. ``interpret=True`` to debug on TPU).
 """
 
 from __future__ import annotations
@@ -21,7 +24,15 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.beam_attn.kernel import beam_attention_kernel
+from repro.kernels.beam_attn.kernel import (beam_attention_kernel,
+                                            paged_beam_attention_kernel)
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> interpret unless we are actually on a TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def pick_block_s(S: int, hd: int, m_rows: int,
@@ -44,12 +55,17 @@ def pick_block_s(S: int, hd: int, m_rows: int,
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_s"))
 def beam_attention(q, shared_k, shared_v, shared_len, unshared_k, unshared_v,
-                   step, interpret: bool = True, block_s: int | None = None):
+                   step, interpret: bool | None = None,
+                   block_s: int | None = None):
     R, BW, H, hd = q.shape
     kvH = shared_k.shape[2]
     G = H // kvH
     M = BW * G
     scale = 1.0 / math.sqrt(hd)
+
+    if block_s is not None and block_s <= 0:
+        raise ValueError(f"block_s must be positive, got {block_s} "
+                         "(pass None for the cost-model choice)")
 
     # beams-major kernel layout
     qk = q.reshape(R, BW, kvH, G, hd).transpose(0, 2, 1, 3, 4).reshape(
@@ -59,10 +75,49 @@ def beam_attention(q, shared_k, shared_v, shared_len, unshared_k, unshared_v,
     uk = unshared_k.transpose(0, 3, 1, 2, 4)      # (R, kvH, BW, ND, hd)
     uv = unshared_v.transpose(0, 3, 1, 2, 4)
 
-    bs = block_s or pick_block_s(sk.shape[2], hd, M)
+    bs = block_s if block_s is not None else pick_block_s(sk.shape[2], hd, M)
     out = beam_attention_kernel(qk, sk, sv, shared_len, uk, uv,
                                 jnp.asarray(step),
-                                scale=scale, block_s=bs, interpret=interpret)
+                                scale=scale, block_s=bs,
+                                interpret=resolve_interpret(interpret))
     # back to engine layout (R, BW, H, hd)
+    return out.reshape(R, kvH, BW, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        R, BW, H, hd).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def arena_beam_attention_kernel(q, pages_k, pages_v, table, shared_len,
+                                unshared_k, unshared_v, step,
+                                interpret: bool | None = None):
+    """Fused paged variant: the shared prefix is read tile-by-tile straight
+    out of the arena page pool via the scalar-prefetched ``table`` — the
+    kernel-side equivalent of ``xattention.arena_beam_attention`` without
+    the contiguous ``gather_pages`` view (DESIGN.md §11).
+
+    q            : (R, BW, H, hd)
+    pages_k/v    : (P, page_tokens, kvH, hd)  — one layer's pool slice
+    table        : (R, MP) int32; entries >= P are unmapped sentinels
+    shared_len   : (R,) int32
+    unshared_k/v : (R, BW, ND, kvH, hd)
+    step         : () int32
+    -> (R, BW, H, hd) in q.dtype
+    """
+    R, BW, H, hd = q.shape
+    P, kvH = pages_k.shape[0], pages_k.shape[2]
+    G = H // kvH
+    M = BW * G
+    scale = 1.0 / math.sqrt(hd)
+
+    qk = q.reshape(R, BW, kvH, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        R, kvH, M, hd)
+    uk = unshared_k.transpose(0, 3, 1, 2, 4)      # (R, kvH, BW, ND, hd)
+    uv = unshared_v.transpose(0, 3, 1, 2, 4)
+    # gather_pages' sentinel rule: unmapped tail entries redirect to page 0;
+    # the shared_len column mask zeroes whatever that page holds
+    ptbl = jnp.where(table < P, table, 0).astype(jnp.int32)
+
+    out = paged_beam_attention_kernel(qk, pages_k, pages_v, ptbl, shared_len,
+                                      uk, uv, jnp.asarray(step), scale=scale,
+                                      interpret=resolve_interpret(interpret))
     return out.reshape(R, kvH, BW, G, hd).transpose(0, 2, 1, 3, 4).reshape(
         R, BW, H, hd).astype(q.dtype)

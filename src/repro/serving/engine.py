@@ -65,6 +65,12 @@ class EngineStats:
     beam_pool_sum: int = 0
     beam_pool_max: int = 0
     beam_pool_dense_sum: int = 0    # the V-wide pool the dense path scans
+    # --- on-device early-termination select (ISSUE 8): of the BW*K
+    # candidates entering each stage-2 sort, how many the running global
+    # bar floored to -inf first (GRConfig.beam_early_term; DESIGN.md §11)
+    beam_early_term: bool = False
+    beam_scanned_sum: int = 0       # stage-2 pool entries (BW*K per select)
+    beam_pruned_sum: int = 0        # entries the bar pruned before stage 2
     # --- pipelined step executor / KV arena accounting (ISSUE 5):
     # one decode "group" = one dispatch covering every same-phase decode
     # entry of a step (width == 1 on the sequential executor by definition)
@@ -102,8 +108,8 @@ def merge_engine_stats(stats_list) -> EngineStats:
     for s in stats_list:
         for f in dataclasses.fields(EngineStats):
             v = getattr(s, f.name)
-            if f.name == "cache_enabled":
-                out.cache_enabled = out.cache_enabled or v
+            if f.name in ("cache_enabled", "beam_early_term"):
+                setattr(out, f.name, getattr(out, f.name) or v)
             elif (f.name.endswith("_max") or f.name.endswith("_peak")
                   or f.name in gauges):
                 setattr(out, f.name, max(getattr(out, f.name), v))
@@ -156,6 +162,9 @@ class GREngine:
             EngineSpec.from_serve_config(serve_cfg, attention_impl)
         if self.spec.beam_select and self.spec.beam_select != gr.beam_select:
             gr = dataclasses.replace(gr, beam_select=self.spec.beam_select)
+        if getattr(serve_cfg, "beam_early_term", False) \
+                and not gr.beam_early_term:
+            gr = dataclasses.replace(gr, beam_early_term=True)
         self.gr = gr
         self.decoder = GRDecoder(cfg, gr, trie, self.spec.attention_impl)
         self.backend: ExecutionBackend = make_backend(
@@ -163,6 +172,7 @@ class GREngine:
             host_overlap=self.spec.host_overlap,
             capacity_hint=serve_cfg.max_batch_requests, mesh=mesh)
         self.stats = EngineStats()
+        self.stats.beam_early_term = gr.beam_early_term
         # --- continuous (chunked) serving state ---------------------------
         self.min_bucket = 64
         self.arena: Optional[KVArena] = None        # lazy (first admit)
@@ -188,12 +198,16 @@ class GREngine:
         of sort work the sparse path never performs)."""
         pools = self.decoder.candidate_pool_sizes()
         V = self.cfg.vocab_size
+        BW = self.gr.beam_width
         for d in phases:
             f = pools[d]
             self.stats.beam_pool_n += requests
             self.stats.beam_pool_sum += requests * f
             self.stats.beam_pool_dense_sum += requests * V
             self.stats.beam_pool_max = max(self.stats.beam_pool_max, f)
+            # stage-2 pool each select sorts (early-term prune denominator)
+            self.stats.beam_scanned_sum += requests * BW * min(self.gr.top_k,
+                                                               f)
 
     def _pad_batch(self, plan: BatchPlan) -> Tuple[jnp.ndarray, jnp.ndarray]:
         R, S = plan.size, plan.bucket_len
@@ -215,6 +229,8 @@ class GREngine:
         for i, r in enumerate(plan.requests):
             r.items = items[i]
             r.log_probs = lps[i]
+        if "pruned" in out:
+            self.stats.beam_pruned_sum += int(np.asarray(out["pruned"]).sum())
         self.stats.batches += 1
         self.stats.requests += plan.size
         self._track_pool(range(self.gr.num_decode_phases), plan.size)
@@ -377,6 +393,8 @@ class GREngine:
     def _finalize(self, req, rt: _ChunkRuntime):
         req.items = np.asarray(rt.state.tokens[0])
         req.log_probs = np.asarray(rt.state.log_probs[0])
+        if rt.state.pruned is not None:
+            self.stats.beam_pruned_sum += int(np.asarray(rt.state.pruned)[0])
         self.release(req.rid)
         self.stats.requests += 1
 

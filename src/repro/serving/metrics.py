@@ -31,17 +31,32 @@ def beam_pool_summary(stats) -> Dict[str, float]:
     are the per-beam candidate-pool widths the select scanned (trie max
     fanout under ``beam_select="sparse"``, the full vocab under "dense"),
     and ``saved_fraction`` is the fraction of dense sort work the sparse
-    path never performed (0.0 on the dense path by construction)."""
+    path never performed (0.0 on the dense path by construction).
+
+    The ``early_term``/``scanned``/``pruned`` block reports the on-device
+    early-termination select (ISSUE 8, ``GRConfig.beam_early_term``):
+    of the BW*K stage-2 candidates each select would sort, how many the
+    running global bar floored first — ``pruned_fraction`` is the Fig 11
+    visited-work saving realized on device (0.0 when the prune is off)."""
     n = stats.beam_pool_n
+    early = {
+        "early_term": bool(getattr(stats, "beam_early_term", False)),
+        "scanned_candidates": int(getattr(stats, "beam_scanned_sum", 0)),
+        "pruned_candidates": int(getattr(stats, "beam_pruned_sum", 0)),
+        "pruned_fraction":
+            getattr(stats, "beam_pruned_sum", 0)
+            / max(getattr(stats, "beam_scanned_sum", 0), 1),
+    }
     if not n:
         return {"phases": 0, "mean_pool": float("nan"), "max_pool": 0,
-                "saved_fraction": 0.0}
+                "saved_fraction": 0.0, **early}
     return {
         "phases": n,
         "mean_pool": stats.beam_pool_sum / n,
         "max_pool": int(stats.beam_pool_max),
         "saved_fraction":
             1.0 - stats.beam_pool_sum / max(stats.beam_pool_dense_sum, 1),
+        **early,
     }
 
 

@@ -68,14 +68,18 @@ def _stack_states(states) -> xbeam.BeamState:
         tokens=jnp.concatenate([s.tokens for s in states], axis=0),
         log_probs=jnp.concatenate([s.log_probs for s in states], axis=0),
         step=states[0].step,
-        prefix_ids=jnp.concatenate([s.prefix_ids for s in states], axis=0))
+        prefix_ids=jnp.concatenate([s.prefix_ids for s in states], axis=0),
+        pruned=(jnp.concatenate([s.pruned for s in states], axis=0)
+                if states[0].pruned is not None else None))
 
 
 def _state_row(state: xbeam.BeamState, i: int) -> xbeam.BeamState:
     return xbeam.BeamState(tokens=state.tokens[i:i + 1],
                            log_probs=state.log_probs[i:i + 1],
                            step=state.step,
-                           prefix_ids=state.prefix_ids[i:i + 1])
+                           prefix_ids=state.prefix_ids[i:i + 1],
+                           pruned=(state.pruned[i:i + 1]
+                                   if state.pruned is not None else None))
 
 
 def _make_group_phase(decoder):

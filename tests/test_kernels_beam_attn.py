@@ -1,5 +1,10 @@
 """Pallas beam-attention kernel: shape/dtype sweep vs the pure-jnp oracle
 (ref.py), in interpret mode (TPU is the target; CPU executes the kernel body).
+
+Also covers the fused PAGED kernel (DESIGN.md §11): the shared prefix read
+tile-by-tile straight out of an arena page pool through a scalar-prefetched
+page table, compared against ``arena_beam_attention`` (gather-then-staged)
+over fragmented tables, sentinel tails, and grown pools.
 """
 
 import math
@@ -9,8 +14,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.xattention import staged_beam_attention
-from repro.kernels.beam_attn.ops import beam_attention, pick_block_s
+from repro.core.xattention import (arena_beam_attention,
+                                   full_reference_attention,
+                                   staged_beam_attention)
+from repro.kernels.beam_attn.ops import (arena_beam_attention_kernel,
+                                         beam_attention, pick_block_s)
 from repro.kernels.beam_attn.ref import beam_attention_ref
 
 SHAPES = [
@@ -88,3 +96,154 @@ def test_pick_block_s_bounds():
     for S in (64, 512, 32768):
         bs = pick_block_s(S, 128, 256)
         assert 128 <= bs <= max(S, 128)
+
+
+def test_explicit_zero_block_s_raises():
+    """block_s=0 used to slip through ``block_s or pick_block_s(...)`` as
+    "unset"; it must raise instead of silently picking a different size."""
+    rng = np.random.default_rng(0)
+    q, sk, sv, slen, uk, uv = _mk(rng, 1, 4, 4, 4, 64, 64, 3, jnp.float32)
+    for bad in (0, -128):
+        with pytest.raises(ValueError, match="block_s"):
+            beam_attention(q, sk, sv, slen, uk, uv, jnp.int32(0),
+                           block_s=bad)
+
+
+def test_zero_length_shared_regression():
+    """S == 0 used to ZeroDivisionError in ``pl.cdiv(S, 0)``; now the shared
+    stage runs on an empty grid and the kernel is unshared-only."""
+    R, BW, H, kvH, hd, ND = 2, 4, 4, 2, 64, 3
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(R, BW, H, hd)), jnp.float32)
+    sk = jnp.zeros((R, 0, kvH, hd), jnp.float32)
+    sv = jnp.zeros((R, 0, kvH, hd), jnp.float32)
+    slen = jnp.zeros((R,), jnp.int32)
+    uk = jnp.asarray(rng.normal(size=(R, BW, ND, kvH, hd)), jnp.float32)
+    uv = jnp.asarray(rng.normal(size=(R, BW, ND, kvH, hd)), jnp.float32)
+    st = jnp.int32(1)
+    out = beam_attention(q, sk, sv, slen, uk, uv, st)
+    ref = full_reference_attention(q, sk, sv, slen, uk, uv, st)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_zero_shared_len_rows_in_nonempty_pool():
+    """Per-request shared_len == 0 rows alongside live rows: the empty
+    request must reduce to unshared-only attention, not NaN."""
+    R, BW, H, kvH, hd, S, ND = 2, 8, 4, 2, 64, 96, 3
+    rng = np.random.default_rng(2)
+    q, sk, sv, _, uk, uv = _mk(rng, R, BW, H, kvH, hd, S, ND, jnp.float32)
+    slen = jnp.asarray([0, 57], jnp.int32)
+    st = jnp.int32(2)
+    out = beam_attention(q, sk, sv, slen, uk, uv, st)
+    assert not np.any(np.isnan(np.asarray(out)))
+    ref = staged_beam_attention(q, sk, sv, slen, uk, uv, st)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+    # row 0 must equal pure-unshared attention (its prefix contributes 0)
+    ref0 = full_reference_attention(
+        q[:1], sk[:1, :0], sv[:1, :0], slen[:1], uk[:1], uv[:1], st)
+    np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(ref0),
+                               atol=3e-5)
+
+
+def test_nan_padding_beyond_frontier():
+    """K/V rows past each request's shared_len hold NaN garbage (arena pages
+    are never cleared); the kernel's masking must keep them inert.  The
+    oracle runs on a zero-padded copy — agreement proves NaN-robustness."""
+    R, BW, H, kvH, hd, S, ND = 2, 8, 8, 4, 64, 160, 3
+    rng = np.random.default_rng(3)
+    q, sk, sv, _, uk, uv = _mk(rng, R, BW, H, kvH, hd, S, ND, jnp.float32)
+    slen = jnp.asarray([130, 64], jnp.int32)
+    st = jnp.int32(1)
+    ref = staged_beam_attention(q, sk, sv, slen, uk, uv, st)
+    rows = np.arange(S)[None, :, None, None]
+    poison = rows >= np.asarray(slen)[:, None, None, None]
+    sk_nan = jnp.asarray(np.where(poison, np.nan, np.asarray(sk)))
+    sv_nan = jnp.asarray(np.where(poison, np.nan, np.asarray(sv)))
+    out = beam_attention(q, sk_nan, sv_nan, slen, uk, uv, st)
+    assert not np.any(np.isnan(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------- paged
+def _mk_paged(rng, R, BW, H, kvH, hd, ND, pg, MP, P, slen, seed_tail_nan=False):
+    """Build a fragmented arena: per-request contiguous KV scattered over a
+    random permutation of pool pages, unmapped tail entries at the OOB
+    sentinel (P), unused pool pages filled with garbage."""
+    S = MP * pg
+    q = jnp.asarray(rng.normal(size=(R, BW, H, hd)), jnp.float32)
+    uk = jnp.asarray(rng.normal(size=(R, BW, ND, kvH, hd)), jnp.float32)
+    uv = jnp.asarray(rng.normal(size=(R, BW, ND, kvH, hd)), jnp.float32)
+    fill = np.nan if seed_tail_nan else 1e3
+    pages_k = np.full((P, pg, kvH, hd), fill, np.float32)
+    pages_v = np.full((P, pg, kvH, hd), fill, np.float32)
+    table = np.full((R, MP), P, np.int32)          # all-sentinel to start
+    perm = rng.permutation(P)[: R * MP].reshape(R, MP)
+    for r in range(R):
+        npages = -(-int(slen[r]) // pg)            # ceil
+        for j in range(npages):
+            table[r, j] = perm[r, j]
+            pages_k[perm[r, j]] = rng.normal(size=(pg, kvH, hd))
+            pages_v[perm[r, j]] = rng.normal(size=(pg, kvH, hd))
+    return (q, jnp.asarray(pages_k), jnp.asarray(pages_v),
+            jnp.asarray(table), jnp.asarray(np.asarray(slen), jnp.int32),
+            uk, uv)
+
+
+@pytest.mark.parametrize("shape", [
+    # R, BW, H, kvH, hd, ND, pg, MP, P, step
+    (2, 4, 4, 2, 64, 3, 16, 5, 32, 1),      # GQA G=2, fragmented
+    (2, 16, 16, 2, 64, 3, 32, 4, 16, 2),    # extreme GQA G=8
+    (1, 8, 4, 4, 128, 4, 64, 3, 8, 3),      # MHA, page = arena default size
+    (3, 4, 4, 2, 64, 3, 16, 1, 8, 0),       # single-page tables
+])
+def test_paged_kernel_matches_arena_gather(shape):
+    """The fused paged kernel == gather_pages + staged attention, over
+    fragmented page tables with sentinel tails and garbage pool pages."""
+    R, BW, H, kvH, hd, ND, pg, MP, P, step = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    S = MP * pg
+    slen = rng.integers(1, S + 1, size=(R,))
+    q, pk, pv, table, slen, uk, uv = _mk_paged(
+        rng, R, BW, H, kvH, hd, ND, pg, MP, P, slen)
+    st = jnp.int32(step)
+    got = arena_beam_attention_kernel(q, pk, pv, table, slen, uk, uv, st)
+    want = arena_beam_attention(q, pk, pv, table, slen, uk, uv, st)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_paged_kernel_survives_arena_growth():
+    """Growing the pool (append pages; tables unchanged) must not perturb
+    the result — the compile key changes but the math is bit-identical."""
+    R, BW, H, kvH, hd, ND, pg, MP, P = 2, 8, 4, 2, 64, 3, 16, 4, 16
+    rng = np.random.default_rng(7)
+    slen = rng.integers(1, MP * pg + 1, size=(R,))
+    q, pk, pv, table, slen, uk, uv = _mk_paged(
+        rng, R, BW, H, kvH, hd, ND, pg, MP, P, slen)
+    st = jnp.int32(1)
+    base = arena_beam_attention_kernel(q, pk, pv, table, slen, uk, uv, st)
+    pk2 = jnp.concatenate([pk, jnp.full((P, pg, kvH, hd), 9e9, jnp.float32)])
+    pv2 = jnp.concatenate([pv, jnp.full((P, pg, kvH, hd), 9e9, jnp.float32)])
+    grown = arena_beam_attention_kernel(q, pk2, pv2, table, slen, uk, uv, st)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(grown))
+    want = arena_beam_attention(q, pk2, pv2, table, slen, uk, uv, st)
+    np.testing.assert_allclose(np.asarray(grown), np.asarray(want), atol=1e-5)
+
+
+def test_paged_kernel_zero_len_and_nan_pool():
+    """shared_len == 0 rows and NaN garbage in unmapped/beyond-frontier pool
+    pages: the paged kernel must stay NaN-free and match the oracle run on
+    the same (masked) arena."""
+    R, BW, H, kvH, hd, ND, pg, MP, P = 2, 4, 4, 2, 64, 3, 16, 3, 12
+    rng = np.random.default_rng(11)
+    slen = np.array([0, 2 * pg + 3])
+    q, pk, pv, table, slen, uk, uv = _mk_paged(
+        rng, R, BW, H, kvH, hd, ND, pg, MP, P, slen, seed_tail_nan=True)
+    st = jnp.int32(2)
+    got = arena_beam_attention_kernel(q, pk, pv, table, slen, uk, uv, st)
+    assert not np.any(np.isnan(np.asarray(got)))
+    # oracle on a zero-filled copy of the same mapped region
+    pk_c = np.nan_to_num(np.asarray(pk), nan=0.0)
+    pv_c = np.nan_to_num(np.asarray(pv), nan=0.0)
+    want = arena_beam_attention(q, jnp.asarray(pk_c), jnp.asarray(pv_c),
+                                table, slen, uk, uv, st)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,14 +1,17 @@
 """xBeam: two-stage Top-K device path vs full-sort reference, and the
 faithful host min-heap early-termination selector (paper Fig 11)."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.config import GRConfig
-from repro.core.xbeam import (beam_step, host_beam_select, init_beam_state,
-                              naive_beam_select)
+from repro.core.xbeam import (beam_step, early_term_prune, host_beam_select,
+                              init_beam_state, naive_beam_select,
+                              sparse_beam_step)
 
 
 def _logits(R, BW, V, seed=0):
@@ -117,6 +120,92 @@ def test_host_heap_tie_break_random_duplicates():
         p_ref, t_ref, lp_ref = naive_beam_select(cand, 6)
         np.testing.assert_array_equal(lp, lp_ref.astype(np.float32))
         np.testing.assert_array_equal(p, p_ref)
+
+
+def _mid_state(gr, R, seed):
+    rng = np.random.default_rng(seed)
+    st = init_beam_state(R, gr)
+    lp = jnp.asarray(np.sort(rng.normal(size=(R, gr.beam_width)))[:, ::-1]
+                     .copy(), jnp.float32)
+    return dataclasses.replace(st, log_probs=lp, step=jnp.int32(1))
+
+
+@pytest.mark.parametrize("seed,quantize,K", [(0, False, 16), (1, True, 16),
+                                             (2, True, 4), (3, False, 8)])
+def test_early_term_bit_identical_dense(seed, quantize, K):
+    """GRConfig.beam_early_term: the on-device running-bar prune must not
+    change ANY selection output — tokens, log_probs, parents — including
+    under heavy score ties (quantized logits) and K < BW."""
+    R, BW, V = 3, 8, 64
+    gr0 = GRConfig(beam_width=BW, top_k=K, num_decode_phases=3)
+    gr1 = dataclasses.replace(gr0, beam_early_term=True)
+    rng = np.random.default_rng(seed)
+    lg = rng.normal(size=(R, BW, V)) * 3.0
+    if quantize:
+        lg = np.round(lg, 1)                   # duplicate-heavy candidates
+    lg = jnp.asarray(lg, jnp.float32)
+    a, pa = beam_step(_mid_state(gr0, R, seed), lg, jnp.float32(0.0), gr0)
+    b, pb = beam_step(_mid_state(gr1, R, seed), lg, jnp.float32(0.0), gr1)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    np.testing.assert_array_equal(np.asarray(a.log_probs),
+                                  np.asarray(b.log_probs))
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    pruned = np.asarray(b.pruned)
+    assert np.all(pruned >= 0) and np.all(pruned <= BW * min(K, V))
+    if K > 1:
+        assert pruned.sum() > 0                # skew guarantees some pruning
+
+
+def test_early_term_bit_identical_sparse():
+    """Same bit-identity over the trie-gather path (padded-CSR pools with
+    dead-beam -1e9 floors and -inf dead state rows)."""
+    from repro.core import ItemTrie
+    from repro.data import gen_catalog
+    V = 64
+    catalog = gen_catalog(40, V, 3, seed=5)
+    trie = ItemTrie(catalog, V)
+    gr0 = GRConfig(beam_width=8, top_k=8, num_decode_phases=3, num_items=40,
+                   tid_vocab=V, beam_select="sparse")
+    gr1 = dataclasses.replace(gr0, beam_early_term=True)
+    rng = np.random.default_rng(6)
+    lg = jnp.asarray(rng.normal(size=(2, 8, V)) * 2.0, jnp.float32)
+    toks, cids = trie.device_children(0)
+    a, pa = sparse_beam_step(init_beam_state(2, gr0), lg, toks, cids, gr0)
+    b, pb = sparse_beam_step(init_beam_state(2, gr1), lg, toks, cids, gr1)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    np.testing.assert_array_equal(np.asarray(a.log_probs),
+                                  np.asarray(b.log_probs))
+    np.testing.assert_array_equal(np.asarray(a.prefix_ids),
+                                  np.asarray(b.prefix_ids))
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    # phase 1 continues from phase 0's state: counter accumulates
+    lg2 = jnp.asarray(rng.normal(size=(2, 8, V)) * 2.0, jnp.float32)
+    t1, c1 = trie.device_children(1)
+    a2, _ = sparse_beam_step(a, lg2, t1, c1, gr0)
+    b2, _ = sparse_beam_step(b, lg2, t1, c1, gr1)
+    np.testing.assert_array_equal(np.asarray(a2.tokens),
+                                  np.asarray(b2.tokens))
+    assert np.all(np.asarray(b2.pruned) >= np.asarray(b.pruned))
+
+
+def test_early_term_prune_matches_heap_bar():
+    """The vectorized running bar prunes exactly the candidates the Fig 11
+    heap walk never visits under a column-major traversal: everything
+    strictly below the global bar over the preceding columns."""
+    rng = np.random.default_rng(8)
+    BW, K = 6, 10
+    v1 = -np.sort(-rng.normal(size=(1, BW, K)) * 2.0, axis=2)
+    out, pruned = early_term_prune(jnp.asarray(v1, jnp.float32), BW)
+    out = np.asarray(out)
+    # reference: bar[j] = BW-th best of columns 0..j
+    for j in range(1, K):
+        bar = np.sort(v1[0, :, :j].reshape(-1))[::-1][BW - 1]
+        for b in range(BW):
+            if v1[0, b, j] < bar:
+                assert out[0, b, j] == -np.inf
+            else:
+                assert out[0, b, j] == np.float32(v1[0, b, j])
+    assert int(pruned[0]) == int(np.sum(out == -np.inf))
 
 
 def test_host_heap_early_termination_saves_work():
