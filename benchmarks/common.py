@@ -23,10 +23,27 @@ BENCH_JSON_DIR = "experiments/bench"
 
 
 def write_bench_json(name: str, record: dict,
-                     outdir: str = BENCH_JSON_DIR) -> str:
+                     outdir: str = BENCH_JSON_DIR,
+                     goodput_rps: float = None,
+                     shed_fraction: float = None,
+                     degraded_fraction: float = None) -> str:
     """Write a benchmark's structured record to the standard bench JSON
-    (``experiments/bench/<name>.json``); returns the path."""
+    (``experiments/bench/<name>.json``); returns the path.
+
+    The optional overload fields (ISSUE 9) land top-level in the record so
+    every bench JSON shares one schema for goodput-vs-offered-load
+    comparisons: ``goodput_rps`` (completed requests per second),
+    ``shed_fraction`` (offered requests rejected or shed), and
+    ``degraded_fraction`` (served requests that were degraded).  Omitted
+    fields are not written — pre-overload benches keep their exact shape.
+    """
     os.makedirs(outdir, exist_ok=True)
+    record = dict(record)
+    for key, val in (("goodput_rps", goodput_rps),
+                     ("shed_fraction", shed_fraction),
+                     ("degraded_fraction", degraded_fraction)):
+        if val is not None:
+            record[key] = float(val)
     path = os.path.join(outdir, f"{name}.json")
     with open(path, "w") as f:
         json.dump(record, f, indent=1)

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
   bench_e2e        -> Fig 13/14 (latency vs RPS, xGR vs paged baseline)
   bench_kernel     -> Fig 17  (kernel efficiency, v5e roofline model)
   bench_schedule   -> Fig 18  (xSchedule ablation)
+  bench_overload   -> ISSUE 9 (goodput/shed curves past saturation)
 """
 
 import sys
@@ -17,10 +18,11 @@ import sys
 def main() -> None:
     from benchmarks import (bench_attention, bench_beam, bench_e2e,
                             bench_invalid, bench_kernel, bench_memory,
-                            bench_schedule)
+                            bench_overload, bench_schedule)
     print("name,us_per_call,derived")
     for mod in (bench_memory, bench_kernel, bench_beam, bench_invalid,
-                bench_attention, bench_schedule, bench_e2e):
+                bench_attention, bench_schedule, bench_e2e,
+                bench_overload):
         print(f"# --- {mod.__name__} ---", file=sys.stderr)
         mod.main()
 

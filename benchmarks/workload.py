@@ -1,0 +1,134 @@
+"""Trace-driven open-loop workload generator (ISSUE 9).
+
+Real recommendation traffic is not a fixed-rate Poisson stream: offered
+load swings diurnally, flash events inject bursts several times the
+baseline, prompt lengths are heavy-tailed (power-law user histories), and
+requests arrive with different SLO tiers.  This module generates such
+traces **open-loop** — arrival times are fixed up front and never react to
+server backpressure, which is exactly what makes an overload bench honest
+(a closed-loop client self-throttles and hides saturation).
+
+Arrival processes are non-homogeneous Poisson, sampled by Lewis-Shedler
+thinning: draw candidates at the peak rate ``lam_max``, accept each at
+probability ``lam(t) / lam_max``.  Shapes:
+
+* ``"constant"`` — homogeneous Poisson at ``rps``;
+* ``"diurnal"`` — one sinusoidal day compressed into ``duration_s``,
+  swinging ``rps`` by ``±diurnal_amplitude``;
+* ``"burst"`` — baseline ``rps`` with ``burst_factor``× windows open a
+  ``burst_duty`` fraction of every ``burst_period_s`` (flash traffic).
+
+Every request carries a ``tier`` drawn from ``tier_mix`` and the tier's
+``slo_ms``; prompt tokens come from caller-provided (power-law) histories.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import GRRequest
+
+
+def arrival_times(rps: float, duration_s: float, shape: str = "constant",
+                  *, diurnal_amplitude: float = 0.6,
+                  burst_factor: float = 4.0, burst_period_s: float = 1.0,
+                  burst_duty: float = 0.25, seed: int = 0) -> np.ndarray:
+    """Open-loop arrival timestamps in ``[0, duration_s)`` for a
+    non-homogeneous Poisson process with mean rate ``rps``."""
+    if rps <= 0 or duration_s <= 0:
+        return np.zeros((0,), np.float64)
+
+    if shape == "constant":
+        def lam(t):
+            return rps
+        lam_max = rps
+    elif shape == "diurnal":
+        amp = min(max(diurnal_amplitude, 0.0), 1.0)
+
+        def lam(t):
+            return rps * (1.0 + amp * math.sin(2 * math.pi * t / duration_s))
+        lam_max = rps * (1.0 + amp)
+    elif shape == "burst":
+        duty = min(max(burst_duty, 1e-6), 1.0)
+        # scale the baseline so the MEAN rate stays `rps` (bursts add on top
+        # of a quieter floor rather than inflating total offered load)
+        base = rps / (1.0 + duty * (burst_factor - 1.0))
+
+        def lam(t):
+            return base * (burst_factor
+                           if (t % burst_period_s) < duty * burst_period_s
+                           else 1.0)
+        lam_max = base * burst_factor
+    else:
+        raise ValueError(f"unknown arrival shape {shape!r}; "
+                         f"have ['constant', 'diurnal', 'burst']")
+
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / lam_max)     # candidate at the peak rate
+        if t >= duration_s:
+            break
+        if rng.random() < lam(t) / lam_max:     # thin to the true rate
+            out.append(t)
+    return np.asarray(out, np.float64)
+
+
+def make_trace(histories: Sequence[np.ndarray], rps: float,
+               duration_s: float, shape: str = "constant", *,
+               tier_mix: Sequence[Tuple[int, float]] = ((0, 1.0),),
+               slo_ms_by_tier: Optional[Dict[int, float]] = None,
+               diurnal_amplitude: float = 0.6,
+               burst_factor: float = 4.0, burst_period_s: float = 1.0,
+               burst_duty: float = 0.25, seed: int = 0) -> List[GRRequest]:
+    """Full open-loop trace: thinned arrivals x history sampling x tier mix.
+
+    ``histories`` supplies the (heavy-tailed) prompt population — e.g.
+    :func:`repro.data.synthetic.gen_histories`; each arrival samples one
+    uniformly.  ``tier_mix`` is ``[(tier, weight), ...]``;
+    ``slo_ms_by_tier`` optionally stamps a per-request deadline per tier
+    (unlisted tiers fall back to the config-wide SLO)."""
+    if not histories:
+        raise ValueError("make_trace needs at least one history")
+    times = arrival_times(rps, duration_s, shape,
+                          diurnal_amplitude=diurnal_amplitude,
+                          burst_factor=burst_factor,
+                          burst_period_s=burst_period_s,
+                          burst_duty=burst_duty, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    tiers = np.asarray([t for t, _ in tier_mix], np.int64)
+    w = np.asarray([max(float(p), 0.0) for _, p in tier_mix], np.float64)
+    if w.sum() <= 0:
+        raise ValueError("tier_mix weights must sum > 0")
+    w = w / w.sum()
+    slo_ms_by_tier = slo_ms_by_tier or {}
+    reqs = []
+    for rid, at in enumerate(times):
+        tier = int(rng.choice(tiers, p=w))
+        hist = histories[int(rng.integers(len(histories)))]
+        reqs.append(GRRequest(
+            rid=rid, tokens=hist, arrival_s=float(at), tier=tier,
+            slo_ms=slo_ms_by_tier.get(tier)))
+    return reqs
+
+
+def trace_stats(trace: Sequence[GRRequest]) -> Dict[str, float]:
+    """Sanity numbers for a generated trace (logged next to bench output)."""
+    if not trace:
+        return {"requests": 0}
+    lens = np.asarray([r.tokens.shape[0] for r in trace], np.float64)
+    times = np.asarray([r.arrival_s for r in trace], np.float64)
+    span = float(times.max() - times.min()) if len(times) > 1 else 0.0
+    tiers: Dict[int, int] = {}
+    for r in trace:
+        tiers[r.tier] = tiers.get(r.tier, 0) + 1
+    return {
+        "requests": len(trace),
+        "mean_rps": len(trace) / span if span > 0 else float("nan"),
+        "prompt_mean": float(lens.mean()),
+        "prompt_p99": float(np.percentile(lens, 99)),
+        "tiers": tiers,
+    }

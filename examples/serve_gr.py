@@ -31,6 +31,14 @@ Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
                           tensor-parallel over its own device-mesh slice;
                           needs replicas x model_axis devices, e.g.
                           XLA_FLAGS=--xla_force_host_platform_device_count=8)
+      [--shed-policy none|reject|degrade]   (overload control, DESIGN §12:
+                          SLO-aware admission rejects requests predicted to
+                          miss their deadline; 'degrade' additionally
+                          finishes over-budget requests early at reduced
+                          beam width instead of letting them miss)
+      [--queue-timeout-ms 50]   (shed queued requests older than this)
+      [--slo-tier 1]   (SLO tier for the whole trace; higher = served
+                        first, shed last)
 """
 
 import argparse
@@ -94,6 +102,18 @@ def main():
     ap.add_argument("--model-axis", type=int, default=1,
                     help="tensor-parallel degree per replica ('model' mesh "
                          "axis); needs replicas x model_axis devices")
+    ap.add_argument("--shed-policy", default="none",
+                    choices=["none", "reject", "degrade"],
+                    help="overload control (DESIGN §12): 'reject' = SLO-"
+                         "aware admission + shed dead queued work; "
+                         "'degrade' = also finish over-budget requests "
+                         "early at reduced beam width instead of missing")
+    ap.add_argument("--queue-timeout-ms", type=float, default=0.0,
+                    help="shed queued requests older than this before "
+                         "dispatch (0 = never shed by age)")
+    ap.add_argument("--slo-tier", type=int, default=0,
+                    help="SLO tier stamped on every request (higher = more "
+                         "important; shedding sweeps lower tiers first)")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -132,7 +152,9 @@ def main():
                        num_replicas=args.replicas,
                        model_axis=args.model_axis,
                        attention_impl=args.attn_impl,
-                       beam_early_term=args.early_term)
+                       beam_early_term=args.early_term,
+                       shed_policy=args.shed_policy,
+                       queue_timeout_ms=args.queue_timeout_ms)
     spec = dataclasses.replace(spec, beam_select=args.beam_select)
     if args.attn_impl:
         spec = dataclasses.replace(spec, attention_impl=args.attn_impl)
@@ -147,10 +169,18 @@ def main():
         system = ServingSystem(engine, scfg)
     handles = []
     for r in trace:                     # submit advances the clock to each
-        handles.append(system.submit(r.tokens, arrival_s=r.arrival_s))
+        handles.append(system.submit(r.tokens, arrival_s=r.arrival_s,
+                                     tier=args.slo_tier))
     system.drain()                      # flush the tail (quota-honoring)
 
-    results = [h.result() for h in handles]
+    all_results = [h.result() for h in handles]
+    # refused requests (status rejected/shed) carry no items and no real
+    # latency — keep the serve-quality stats over what was actually served
+    results = [r for r in all_results if r.status == "completed"]
+    if not results:
+        print("every request was rejected/shed; nothing served "
+              "(lower --rps or raise --queue-timeout-ms)")
+        return
     duration = max(r.finish_s for r in results)
     s = latency_summary([r.latency_s for r in results], duration)
     viol = sum(1 for r in results if r.latency_s * 1e3 > scfg.slo_ms)
@@ -205,6 +235,14 @@ def main():
                   f"{rs['dispatches']} dispatches, "
                   f"device {rs['device_s']:.2f}s, "
                   f"arena peak {rs['arena_pages_peak']} pages")
+    if args.shed_policy != "none" or args.queue_timeout_ms > 0:
+        ov = system.overload_report()
+        c = ov["counters"]
+        print(f"  overload   : policy={args.shed_policy}, "
+              f"{c['completed']}/{c['submitted']} served "
+              f"({c['rejected']} rejected, {c['shed']} shed, "
+              f"{c['degraded']} degraded), "
+              f"{ov['deadline_misses']} deadline misses among admitted")
     r0 = results[0]
     if "batch_size" in r0.timing:
         shape = (f"in a {int(r0.timing['batch_size'])}-request batch "

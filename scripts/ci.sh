@@ -315,4 +315,53 @@ print(f"kernel smoke ok: identical items, "
       f"stage-2 candidates ({bp['pruned_fraction']*100:.0f}%), "
       f"no pool-shaped gather in the decode program")
 EOF
+echo "== overload smoke: burst trace, shedding on, admitted all in-SLO =="
+python - <<'EOF'
+import jax, numpy as np
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import ItemTrie
+from repro.data import gen_catalog, gen_histories
+from repro.models import get_model
+from repro.serving import ServingSystem, make_engine
+
+cfg = get_config("onerec-0.1b").reduced()
+gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+              num_items=100, tid_vocab=cfg.vocab_size)
+catalog = gen_catalog(gr.num_items, cfg.vocab_size, 3, seed=0)
+trie = ItemTrie(catalog, cfg.vocab_size)
+params = get_model(cfg).init(jax.random.PRNGKey(0))
+hist = gen_histories(catalog, 10, max_tokens=64, seed=3)
+for executor in ("sequential", "pipelined"):
+    # generous SLO (no admitted request can miss it) + tight queue timeout:
+    # the t=0 burst overflows the 2-slot active set, so the overflow ages
+    # past 30 ms while the first steps run and MUST shed deterministically
+    scfg = ServeConfig(max_batch_requests=2, scheduler_policy="chunked",
+                      prefill_chunk_tokens=64, executor=executor,
+                      slo_ms=60_000.0, shed_policy="degrade",
+                      queue_timeout_ms=30.0)
+    eng = make_engine(cfg, gr, params, trie, scfg,
+                      spec=EngineSpec(backend="graph", num_streams=2))
+    system = ServingSystem(eng, scfg)
+    hs = [system.submit(hist[i % len(hist)], arrival_s=0.0)
+          for i in range(24)]
+    system.drain()
+    ov = system.overload_report()
+    c = ov["counters"]
+    # counters present in the report surface
+    for key in ("submitted", "completed", "rejected", "shed", "degraded",
+                "aborted"):
+        assert key in c, f"{executor}: ServerReport missing {key}"
+    assert c["shed"] > 0, f"{executor}: burst shed nothing: {c}"
+    assert ov["deadline_misses"] == 0, \
+        f"{executor}: admitted requests missed deadlines: {ov}"
+    assert c["completed"] + c["shed"] + c["rejected"] == len(hs), c
+    assert all(system.status(h.rid) in ("completed", "shed", "rejected")
+               for h in hs), f"{executor}: unresolved rids"
+    assert not eng._runtimes and eng.arena.pages_used == 0, \
+        f"{executor}: leaked engine state"
+    print(f"overload smoke [{executor}]: {c['completed']} served "
+          f"({c['degraded']} degraded), {c['shed']} shed, "
+          f"0 deadline misses among admitted")
+EOF
 echo "CI OK"

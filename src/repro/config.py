@@ -309,6 +309,33 @@ class ServeConfig:
     #: enable GRConfig.beam_early_term on the engine's beam select
     #: (bit-identical selections; pruning stats in ServerReport.beam_pool)
     beam_early_term: bool = False
+    #: overload control (ISSUE 9, DESIGN.md §12):
+    #:   "none"    — accept everything unconditionally (the pre-overload
+    #:               behavior, bit-identical outputs)
+    #:   "reject"  — admission control + queue shedding: a per-replica cost
+    #:               model (EWMA-calibrated from measured step timings)
+    #:               predicts completion at submit; requests predicted past
+    #:               their deadline get a typed ``ServeResult(
+    #:               status="rejected")``, and queued requests past
+    #:               ``queue_timeout_ms`` (or their deadline) are shed at
+    #:               plan time instead of dispatched dead
+    #:   "degrade" — "reject" plus graceful degradation: over-budget
+    #:               in-flight requests finish early at a phase boundary
+    #:               (phase truncation) and serve a top-BW' slice of the
+    #:               same beam state (exact subset of the full-width
+    #:               selection), recorded per request
+    shed_policy: str = "none"
+    #: shed queued requests older than this (milliseconds, simulated clock)
+    #: at plan time; 0 = never shed by age (deadline shedding still applies
+    #: when shed_policy != "none")
+    queue_timeout_ms: float = 0.0
+    #: safety factor on the admission cost model's completion prediction —
+    #: >1 rejects earlier (protects admitted requests' deadlines at the
+    #: cost of goodput near the boundary)
+    admission_margin: float = 1.2
+    #: beam width served by a degraded request (top rows of the SAME beam
+    #: state — an exact subset of the full-width selection); 0 = BW // 2
+    degrade_beam_width: int = 0
 
 
 @dataclass(frozen=True)

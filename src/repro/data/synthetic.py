@@ -23,6 +23,8 @@ class GRRequest:
     tokens: np.ndarray          # (len,) int32 history token stream
     arrival_s: float
     target_item: Optional[np.ndarray] = None   # (nd,) next item (training)
+    tier: int = 0               # SLO tier (ISSUE 9): higher = more important
+    slo_ms: Optional[float] = None  # per-request deadline; None = config SLO
 
 
 def powerlaw_lengths(n: int, lo: int, hi: int, alpha: float = 1.5,

@@ -1,9 +1,11 @@
+from repro.serving.admission import CostModel
 from repro.serving.api import RequestHandle, ServeResult, ServingSystem
 from repro.serving.engine import GREngine, EngineStats, merge_engine_stats
 from repro.serving.metrics import (beam_pool_summary, cache_summary,
                                    engine_summary, latency_summary,
-                                   percentile, pipeline_summary,
-                                   replica_summary, ttft_summary)
+                                   overload_summary, percentile,
+                                   pipeline_summary, replica_summary,
+                                   ttft_summary)
 from repro.serving.pipeline import PipelinedEngine, make_engine
 from repro.serving.prefix_cache import CacheStats, PrefixCache
 from repro.serving.replica import (Replica, ReplicaRouter,
@@ -22,9 +24,10 @@ __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
            "PipelinedEngine", "make_engine",
            "PrefixCache", "CacheStats",
            "Replica", "ReplicaRouter", "make_sharded_system",
+           "CostModel",
            "latency_summary", "engine_summary", "percentile", "ttft_summary",
            "beam_pool_summary", "pipeline_summary", "cache_summary",
-           "replica_summary",
+           "replica_summary", "overload_summary",
            "BatchPlan", "RequestState", "Phase", "StepEntry", "StepPlan",
            "group_decode_entries",
            "SchedulerPolicy", "TokenCapacityBatcher", "EDFBatcher",

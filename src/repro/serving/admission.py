@@ -1,0 +1,77 @@
+"""SLO-aware admission control (ISSUE 9 tentpole, DESIGN.md §12).
+
+The admission question — "can this request still meet its deadline?" — is
+answered by a tiny per-replica :class:`CostModel` calibrated online from the
+engine's own measured step timings: every ``run_step``/``run_batch`` feeds
+``observe(tokens, seconds)``, and two EWMAs track the replica's marginal
+cost per scheduled token and its typical step duration.  At submit the
+serving loop predicts
+
+    completion ≈ now + pipeline_wait + (backlog + own_work) × cost_per_token
+
+(times a configurable safety ``margin``) and rejects requests whose best
+prediction across the fleet already exceeds their deadline — a typed
+``ServeResult(status="rejected")`` instead of a doomed dispatch.  The same
+``step_s`` EWMA prices the degradation decision ("how many decode phases
+still fit before the deadline?").
+
+The model is deliberately scale-free: it learns whatever the substrate
+actually costs (real measured CPU compute on this host, a TPU elsewhere)
+and needs no offline profile.  Until ``ready()`` — a handful of observed
+steps — admission stays open, so cold starts never reject on a garbage
+estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class CostModel:
+    """EWMA cost model over observed (scheduled tokens, wall seconds)."""
+
+    alpha: float = 0.3              # EWMA weight of the newest observation
+    min_steps: int = 3              # observations before predictions count
+    cost_per_token: float = 0.0     # seconds per scheduled token
+    step_s: float = 0.0             # seconds per engine step/batch
+    steps: int = 0                  # observations so far
+
+    def observe(self, tokens: float, seconds: float) -> None:
+        """Feed one executed step/batch: its scheduled token cost and its
+        measured critical-path duration."""
+        tokens = max(float(tokens), 1.0)
+        seconds = max(float(seconds), 0.0)
+        cpt = seconds / tokens
+        if self.steps == 0:
+            self.cost_per_token = cpt
+            self.step_s = seconds
+        else:
+            a = self.alpha
+            self.cost_per_token = a * cpt + (1 - a) * self.cost_per_token
+            self.step_s = a * seconds + (1 - a) * self.step_s
+        self.steps += 1
+
+    def ready(self) -> bool:
+        """True once enough steps were observed to trust predictions —
+        admission stays open (never rejects) before this."""
+        return self.steps >= self.min_steps
+
+    def work_s(self, tokens: float) -> float:
+        """Predicted seconds to execute ``tokens`` scheduled tokens."""
+        return max(float(tokens), 0.0) * self.cost_per_token
+
+    def predict_completion_s(self, now_s: float, wait_s: float,
+                             tokens: float, margin: float = 1.0) -> float:
+        """Predicted completion time of a request joining a replica with
+        ``wait_s`` of pipeline wait and ``tokens`` total scheduled work
+        (its own + the backlog ahead of it)."""
+        return now_s + max(wait_s, 0.0) + self.work_s(tokens) * margin
+
+    def phases_affordable(self, now_s: float, deadline_s: float) -> int:
+        """How many more whole engine steps fit before ``deadline_s`` —
+        the degradation pass's phase-truncation budget.  Conservative
+        floor division; at least 0."""
+        if self.step_s <= 0.0:
+            return 1 << 30
+        return max(0, int((deadline_s - now_s) / self.step_s))

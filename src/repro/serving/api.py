@@ -34,6 +34,7 @@ curves).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Union
 
 import numpy as np
@@ -47,7 +48,16 @@ from repro.serving.scheduler import SchedulerPolicy, make_policy
 
 @dataclasses.dataclass
 class ServeResult:
-    """Typed result of one served request."""
+    """Typed result of one served request.
+
+    ``status`` is the request's terminal disposition (ISSUE 9):
+
+    * ``"completed"`` — served (possibly degraded; see ``degraded``);
+    * ``"rejected"`` — admission control predicted a deadline miss at
+      submit time and never placed it (``items`` is empty);
+    * ``"shed"`` — queued past ``queue_timeout_ms`` or its deadline and
+      withdrawn before dispatch (``items`` is empty).
+    """
 
     rid: int
     items: np.ndarray               # (BW, ND) generated item TIDs
@@ -55,6 +65,14 @@ class ServeResult:
     arrival_s: float
     dispatch_s: float
     finish_s: float
+    status: str = "completed"       # "completed" | "rejected" | "shed"
+    tier: int = 0                   # SLO tier it was submitted with
+    #: graceful degradation (ISSUE 9): True when served narrower/shorter
+    #: than requested — ``served_beam_width``/``served_phases`` say how
+    #: (0 = full).  Always False when ``shed_policy != "degrade"``.
+    degraded: bool = False
+    served_beam_width: int = 0
+    served_phases: int = 0
     #: simulated time the request's FIRST beam phase ran (prefill complete,
     #: first scored continuations exist).  Chunked serving measures it at
     #: the step that ran the final prefill chunk; monolithic batches only
@@ -66,6 +84,11 @@ class ServeResult:
     #: batch's engine breakdown (device_s / host_mask_s / critical_s /
     #: compile_s / dispatches) and shape (batch_size, bucket_len).
     timing: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        """True when the request was actually served."""
+        return self.status == "completed"
 
     @property
     def latency_s(self) -> float:
@@ -162,6 +185,24 @@ class ServingSystem:
         self._aborted: set = set()
         self._results: Dict[int, ServeResult] = {}
         self.completed: List[RequestState] = []
+        # ---- overload control (ISSUE 9) --------------------------------
+        cfg = self.serve_cfg
+        self._shed_policy = str(getattr(cfg, "shed_policy", "none"))
+        if self._shed_policy not in ("none", "reject", "degrade"):
+            raise ValueError(f"unknown shed_policy {self._shed_policy!r}; "
+                             f"have ['none', 'reject', 'degrade']")
+        self._queue_timeout_s = \
+            max(0.0, float(getattr(cfg, "queue_timeout_ms", 0.0))) / 1e3
+        #: any shedding machinery active?  False keeps every hot path —
+        #: submit, step, drain — bit-identical to the pre-overload system.
+        self._overload = (self._shed_policy != "none"
+                          or self._queue_timeout_s > 0.0)
+        #: fleet-wide terminal-disposition counters (ServerReport surface)
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "rejected": 0,
+            "shed": 0, "degraded": 0, "aborted": 0}
+        #: per-SLO-tier view of the same counters (fairness audits)
+        self.tier_counters: Dict[int, Dict[str, int]] = {}
         # continuous (chunked) policies plan engine *steps* instead of
         # whole-request batches; each replica's step pipeline is ONE
         # sequential stream (num_streams applies to whole-batch dispatch
@@ -222,32 +263,64 @@ class ServingSystem:
 
     def submit(self, tokens: np.ndarray, arrival_s: Optional[float] = None,
                rid: Optional[int] = None,
-               slo_ms: Optional[float] = None) -> RequestHandle:
+               slo_ms: Optional[float] = None,
+               tier: int = 0) -> RequestHandle:
         """Enqueue one request; advances the clock to ``arrival_s``.
 
-        ``slo_ms`` sets a per-request deadline (used by the "edf" policy);
-        default is the config-wide ``serve_cfg.slo_ms``.
+        ``slo_ms`` sets a per-request deadline (used by the "edf" policy and
+        by admission control); default is the config-wide
+        ``serve_cfg.slo_ms``.  ``tier`` is the SLO tier (higher = more
+        important): scheduling packs higher tiers first and shedding /
+        degradation sweep lower tiers first (ISSUE 9).
+
+        With ``serve_cfg.shed_policy != "none"`` a request whose predicted
+        completion already misses its deadline is **rejected** here — its
+        handle immediately resolves to ``ServeResult(status="rejected")``
+        and nothing is placed on any replica.
         """
         if arrival_s is None:
             arrival_s = self._now
         if arrival_s > self._now:
             self.step(arrival_s)         # fire deadlines on the way
-        # the clock is monotonic: a late (out-of-order) submit enqueues now,
-        # but keeps its true arrival time so latency accounting stays honest
-        enqueue_at = max(arrival_s, self._now)
+        elif arrival_s < self._now:
+            # the clock is monotonic: an out-of-order submit cannot arrive
+            # in the past — clamp to the current simulated time and say so
+            # (silently keeping the stale timestamp inflated every latency
+            # derived from it)
+            warnings.warn(
+                f"submit(arrival_s={arrival_s:g}) is earlier than the "
+                f"simulated clock ({self._now:g}); clamping to now",
+                stacklevel=2)
+            arrival_s = self._now
         if rid is None:
             rid = self._next_rid
         elif rid in self._rids:
             raise ValueError(f"duplicate rid {rid}")
         self._rids.add(rid)
         self._next_rid = max(self._next_rid, rid + 1)
-        deadline = arrival_s + slo_ms / 1e3 if slo_ms is not None else None
+        eff_slo = slo_ms
+        if eff_slo is None and self._overload:
+            # admission/shedding needs a deadline to reason about; fall
+            # back to the config-wide SLO (None stays None: no deadline,
+            # never rejected, only queue-timeout shedding applies)
+            eff_slo = getattr(self.serve_cfg, "slo_ms", None)
+        deadline = arrival_s + eff_slo / 1e3 if eff_slo is not None else None
         state = RequestState(rid, np.asarray(tokens, np.int32), arrival_s,
-                             deadline_s=deadline)
+                             deadline_s=deadline, tier=int(tier))
+        self.counters["submitted"] += 1
+        self._tier_count(state.tier, "submitted")
+        # admission control (ISSUE 9): if the BEST predicted completion
+        # across the fleet already misses the deadline, reject now —
+        # dispatching it would only burn capacity on a guaranteed miss
+        if (self._shed_policy != "none" and deadline is not None
+                and self._predict_best(state) > deadline):
+            return self._refuse(state, "rejected", self._now)
         # router placement (ISSUE 7): least-outstanding-tokens replica; a
         # single-replica system trivially places everything on replica 0
         rep = self.router.place(state)
-        rep.policy.add(state, enqueue_at)
+        rep.policy.add(state, arrival_s)
+        if not self._continuous:
+            self._shed_queued(rep, self._now)
         # capacity-triggered dispatches (quota handled by step/drain)
         while True:
             plan = rep.policy.maybe_dispatch(self._now)
@@ -255,6 +328,134 @@ class ServingSystem:
                 break
             self._dispatch(rep, plan, self._now)
         return RequestHandle(self, state)
+
+    # --------------------------------------------- overload control internals
+    def _tier_count(self, tier: int, key: str) -> None:
+        tc = self.tier_counters.setdefault(
+            int(tier), {"submitted": 0, "completed": 0, "rejected": 0,
+                        "shed": 0, "degraded": 0, "aborted": 0})
+        tc[key] += 1
+
+    def _request_tokens(self, state: RequestState, rep: Replica) -> float:
+        """Total scheduled tokens one request will cost ``rep``: prompt
+        tokens to prefill plus beam-width queries per decode phase."""
+        gr = getattr(rep.engine, "gr", None)
+        decode = (gr.beam_width * max(gr.num_decode_phases - 1, 0)
+                  if gr is not None else 0)
+        return float(state.prompt_len + decode)
+
+    def _predict_best(self, state: RequestState) -> float:
+        """Best (earliest) predicted completion of ``state`` across the
+        fleet.  Replicas whose cost model is not ``ready()`` predict
+        ``now`` — admission stays open until calibrated."""
+        best = None
+        for rep in self.replicas:
+            if not rep.cost_model.ready():
+                return self._now        # cold start: always admissible
+            if self._continuous:
+                wait = max(0.0, rep.busy_until - self._now)
+            else:
+                wait = max(0.0, float(np.min(rep.streams)) - self._now)
+            tokens = rep.outstanding_tokens() + self._request_tokens(
+                state, rep)
+            t = rep.cost_model.predict_completion_s(
+                self._now, wait, tokens,
+                margin=float(getattr(self.serve_cfg,
+                                     "admission_margin", 1.0)))
+            best = t if best is None else min(best, t)
+        return best if best is not None else self._now
+
+    def _refuse(self, state: RequestState, status: str,
+                t: float) -> RequestHandle:
+        """Terminal no-service disposition (rejected at submit / shed from
+        the queue): synthesize an empty typed result so the handle resolves
+        immediately, and count it."""
+        state.finish_s = t
+        res = ServeResult(
+            rid=state.rid, items=np.zeros((0, 0), np.int32),
+            log_probs=np.zeros((0,), np.float32),
+            arrival_s=state.arrival_s, dispatch_s=t, finish_s=t,
+            status=status, tier=state.tier,
+            timing={"queue_s": t - state.arrival_s})
+        self._results[state.rid] = res
+        self.counters[status] += 1
+        self._tier_count(state.tier, status)
+        return RequestHandle(self, state)
+
+    def _shed_queued(self, rep: Replica, t: float) -> None:
+        """Load shedding (ISSUE 9): withdraw queued-but-undispatched
+        requests that aged past ``queue_timeout_ms`` or whose deadline has
+        already passed — dispatching them would serve dead work.  Sweeps
+        lower tiers first.  No-op unless overload control is enabled and
+        the policy exposes ``queued_requests``/``remove``."""
+        if not self._overload:
+            return
+        queued = getattr(rep.policy, "queued_requests", None)
+        remove = getattr(rep.policy, "remove", None)
+        if queued is None or remove is None:
+            return
+        doomed = []
+        for r in queued():
+            if r.rid in self._results:
+                continue
+            age = t - (r.enqueue_s if r.enqueue_s is not None
+                       else r.arrival_s)
+            timed_out = 0.0 < self._queue_timeout_s < age
+            dead = (self._shed_policy != "none"
+                    and r.deadline_s is not None and t > r.deadline_s)
+            if timed_out or dead:
+                doomed.append(r)
+        for r in sorted(doomed, key=lambda r: (r.tier, r.rid)):
+            if not remove(r.rid):
+                continue
+            release = getattr(rep.engine, "release", None)
+            if release is not None:
+                release(r.rid)
+            self.router.settle(r.rid)
+            self._refuse(r, "shed", t)
+
+    def _apply_degradation(self, rep: Replica, plan, t: float) -> None:
+        """Graceful degradation (ISSUE 9, ``shed_policy="degrade"``): for
+        each planned entry whose request cannot finish FULL service by its
+        deadline (priced by the replica's calibrated ``step_s``), mark the
+        entry ``final`` — the engine finalizes it at this phase boundary
+        with a narrowed beam — instead of letting it run long and miss.
+        Requests without deadlines, and everything when the model is not
+        yet calibrated, pass through untouched."""
+        cm = rep.cost_model
+        if self._shed_policy != "degrade" or not cm.ready() \
+                or cm.step_s <= 0.0:
+            return
+        gr = getattr(rep.engine, "gr", None)
+        nd = int(gr.num_decode_phases) if gr is not None else \
+            int(getattr(rep.policy, "num_decode_phases", 1))
+        bw = int(gr.beam_width) if gr is not None else 0
+        dbw = int(getattr(self.serve_cfg, "degrade_beam_width", 0) or 0)
+        if dbw <= 0:
+            dbw = max(1, bw // 2)
+        for e in plan.entries:
+            r = e.req
+            if r.deadline_s is None or e.final:
+                continue
+            if e.kind == "decode":
+                # this step runs phase d; full service needs (nd - d)
+                # more steps including this one
+                steps_left = nd - e.decode_phase
+                if e.decode_phase >= nd - 1:
+                    continue            # already the last phase
+                if t + cm.step_s * steps_left > r.deadline_s:
+                    e.final = True
+                    r.degraded = True
+                    r.served_phases = e.decode_phase + 1
+                    r.served_beam_width = min(dbw, bw) if bw else dbw
+            elif e.kind == "prefill" and e.last_chunk:
+                # after this chunk: beam phase 0 now, nd - 1 decode steps
+                if t + cm.step_s * max(nd, 1) > r.deadline_s:
+                    if nd > 1:          # nd <= 1 finalizes here anyway —
+                        e.final = True  # only the width narrows
+                    r.degraded = True
+                    r.served_phases = 1
+                    r.served_beam_width = min(dbw, bw) if bw else dbw
 
     def step(self, now_s: Optional[float] = None) -> List[ServeResult]:
         """Advance the simulated clock to ``now_s``, dispatching every batch
@@ -271,6 +472,7 @@ class ServingSystem:
             if deadline is None or deadline > now_s:
                 break
             t = max(deadline, self._now)
+            self._shed_queued(rep, t)
             plan = rep.policy.maybe_dispatch(t)
             if plan is None:             # liveness: never spin on a deadline
                 plan = rep.policy.maybe_dispatch(t, force=True)
@@ -283,6 +485,7 @@ class ServingSystem:
         while progressed:                # anything due exactly at now_s
             progressed = False
             for rep in self.replicas:
+                self._shed_queued(rep, self._now)
                 while True:
                     plan = rep.policy.maybe_dispatch(self._now)
                     if plan is None:
@@ -307,6 +510,9 @@ class ServingSystem:
             if rep is None:             # deadline-less leftovers: any queue
                 rep = next(r for r in self.replicas if len(r.policy))
             t = self._now if deadline is None else max(self._now, deadline)
+            self._shed_queued(rep, t)
+            if not len(rep.policy):     # shedding emptied this queue
+                continue
             plan = rep.policy.maybe_dispatch(t, force=True)
             if plan is None:
                 # liveness: a policy that refuses even a forced dispatch
@@ -345,8 +551,24 @@ class ServingSystem:
                 self._aborted.add(rid)
                 if hasattr(rep.engine, "release"):
                     rep.engine.release(rid)
+                self.router.settle(rid)
+                self.counters["aborted"] += 1
                 return True
         return False
+
+    def status(self, rid: int) -> str:
+        """Terminal (or current) disposition of a submitted rid: one of
+        ``"completed" | "rejected" | "shed" | "aborted" | "pending"`` —
+        every submitted request resolves to exactly one of the first four
+        once the system drains (the ISSUE 9 conservation invariant)."""
+        if rid in self._aborted:
+            return "aborted"
+        res = self._results.get(rid)
+        if res is not None:
+            return res.status
+        if rid in self._rids:
+            return "pending"
+        raise KeyError(f"unknown rid {rid}")
 
     def _release_orphans(self) -> None:
         """Free engine-side state of requests that never completed (aborted
@@ -362,7 +584,10 @@ class ServingSystem:
             for rid in list(active()):
                 if rid not in self._results:
                     release(rid)
+                    if rid not in self._aborted:
+                        self.counters["aborted"] += 1
                     self._aborted.add(rid)
+                    self.router.settle(rid)
 
     def _earliest_deadline(self):
         """(replica, deadline) with the earliest pending quota deadline
@@ -399,15 +624,18 @@ class ServingSystem:
             if not candidates:
                 break
             t, _, rep = min(candidates)
+            self._shed_queued(rep, t)   # dead queued work never dispatches
             rep.policy.admit(t)
             plan = rep.policy.plan_step(t)
             if plan is None:        # defensive: has_work lied (foreign
                 stuck.add(rep.index)  # policy) — skip, don't spin
                 continue
+            self._apply_degradation(rep, plan, t)
             timing = rep.engine.run_step(plan)      # real measured compute
             end = t + timing["critical_s"]
             rep.busy_until = end
             rep.dispatches += 1
+            rep.cost_model.observe(plan.token_cost, timing["critical_s"])
             rep.policy.commit(plan)
             for e in plan.entries:
                 r = e.req
@@ -418,12 +646,21 @@ class ServingSystem:
                 if r.phase is Phase.DONE and r.rid not in self._results:
                     r.finish_s = end
                     rep.completed += 1
+                    self.router.settle(r.rid)
+                    self.counters["completed"] += 1
+                    self._tier_count(r.tier, "completed")
+                    if r.degraded:
+                        self.counters["degraded"] += 1
+                        self._tier_count(r.tier, "degraded")
                     res = ServeResult(
                         rid=r.rid, items=r.items, log_probs=r.log_probs,
                         arrival_s=r.arrival_s, dispatch_s=r.dispatch_s,
                         finish_s=end,
                         first_beam_s=(r.first_beam_s if r.first_beam_s
                                       is not None else end),
+                        tier=r.tier, degraded=r.degraded,
+                        served_beam_width=r.served_beam_width,
+                        served_phases=r.served_phases,
                         timing={"queue_s": r.dispatch_s - r.arrival_s,
                                 "step_tokens": float(plan.token_cost),
                                 **timing})
@@ -442,6 +679,7 @@ class ServingSystem:
         rep.streams[sidx] = start + dur
         rep.dispatches += 1
         rep.completed += plan.size
+        rep.cost_model.observe(plan.padded_tokens, dur)
         out = []
         for r in plan.requests:
             r.dispatch_s = start
@@ -449,10 +687,13 @@ class ServingSystem:
             # monolithic batches materialize everything at once: the first
             # beam phase is only observable when the program returns
             r.first_beam_s = r.finish_s
+            self.router.settle(r.rid)
+            self.counters["completed"] += 1
+            self._tier_count(r.tier, "completed")
             res = ServeResult(
                 rid=r.rid, items=r.items, log_probs=r.log_probs,
                 arrival_s=r.arrival_s, dispatch_s=start, finish_s=r.finish_s,
-                first_beam_s=r.finish_s,
+                first_beam_s=r.finish_s, tier=r.tier,
                 timing={"queue_s": start - r.arrival_s,
                         "batch_size": float(plan.size),
                         "bucket_len": float(plan.bucket_len), **timing})
@@ -464,3 +705,32 @@ class ServingSystem:
     def results(self) -> List[ServeResult]:
         """All completed results, in completion order."""
         return [self._results[r.rid] for r in self.completed]
+
+    def dispositions(self) -> List[ServeResult]:
+        """Every terminal result — completed AND rejected/shed (ISSUE 9).
+        ``results()`` deliberately excludes refused requests so latency
+        summaries stay unpolluted; overload accounting needs all of them."""
+        return list(self._results.values())
+
+    def overload_report(self) -> Dict:
+        """Fleet-wide overload-control accounting (ISSUE 9): terminal-
+        disposition counters, the same per SLO tier, and how many ADMITTED
+        requests finished past their deadline (the number admission control
+        exists to drive to zero)."""
+        misses = sum(1 for r in self.completed
+                     if r.deadline_s is not None
+                     and r.finish_s is not None
+                     and r.finish_s > r.deadline_s)
+        return {
+            "shed_policy": self._shed_policy,
+            "queue_timeout_ms": self._queue_timeout_s * 1e3,
+            "counters": dict(self.counters),
+            "tier_counters": {t: dict(c) for t, c in
+                              sorted(self.tier_counters.items())},
+            "deadline_misses": misses,
+            "cost_models": [
+                {"replica": rep.index, "steps": rep.cost_model.steps,
+                 "cost_per_token_us": rep.cost_model.cost_per_token * 1e6,
+                 "step_ms": rep.cost_model.step_s * 1e3}
+                for rep in self.replicas],
+        }

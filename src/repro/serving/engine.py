@@ -391,8 +391,20 @@ class GREngine:
         return rids
 
     def _finalize(self, req, rt: _ChunkRuntime):
-        req.items = np.asarray(rt.state.tokens[0])
-        req.log_probs = np.asarray(rt.state.log_probs[0])
+        items = np.asarray(rt.state.tokens[0])
+        lps = np.asarray(rt.state.log_probs[0])
+        if getattr(req, "degraded", False):
+            # graceful degradation (ISSUE 9): serve the top-BW' beams of
+            # the SAME state — ``log_probs`` rows are descending, so the
+            # slice is an exact subset of the full-width selection.  Phase
+            # truncation already happened upstream (the ``final`` entry);
+            # columns past ``served_phases`` simply were never decoded.
+            bw = int(getattr(req, "served_beam_width", 0) or 0)
+            if 0 < bw < items.shape[0]:
+                items = items[:bw]
+                lps = lps[:bw]
+        req.items = items
+        req.log_probs = lps
         if rt.state.pruned is not None:
             self.stats.beam_pruned_sum += int(np.asarray(rt.state.pruned)[0])
         self.release(req.rid)
@@ -443,7 +455,7 @@ class GREngine:
                     compile_s += cs
                     dispatches += 1
                     self._track_pool((0,))
-                    if nd <= 1:
+                    if nd <= 1 or e.final:
                         self._finalize(r, rt)
             else:
                 rt = self._runtimes[r.rid]
@@ -466,7 +478,7 @@ class GREngine:
                 self.stats.decode_group_width_sum += 1
                 self.stats.decode_group_width_max = max(
                     self.stats.decode_group_width_max, 1)
-                if d == nd - 1:
+                if d == nd - 1 or e.final:
                     self._finalize(r, rt)
         self.stats.batches += 1
         self.stats.dispatches += dispatches

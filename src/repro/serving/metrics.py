@@ -156,6 +156,35 @@ def latency_summary(latencies_s: Sequence[float],
     }
 
 
+def overload_summary(results, duration_s: float) -> Dict[str, float]:
+    """Overload-control outcome summary over a list of
+    :class:`~repro.serving.api.ServeResult` (ISSUE 9).
+
+    ``goodput_rps`` counts only requests actually served — the curve the
+    overload bench sweeps past saturation: without admission control it
+    collapses (capacity burns on doomed work); with it, goodput plateaus
+    at the service rate while the excess is shed cheaply at submit time.
+    ``p99_ms`` here is the p99 of ADMITTED requests only, so shed traffic
+    cannot launder the tail."""
+    results = list(results)
+    served = [r for r in results if r.status == "completed"]
+    lats = [r.latency_s for r in served]
+    n = len(served)
+    return {
+        "offered": len(results),
+        "served": n,
+        "rejected": sum(1 for r in results if r.status == "rejected"),
+        "shed": sum(1 for r in results if r.status == "shed"),
+        "degraded": sum(1 for r in served if r.degraded),
+        "goodput_rps":
+            n / duration_s if duration_s > 0 else float("nan"),
+        "shed_fraction":
+            1.0 - n / len(results) if results else 0.0,
+        "p99_ms": percentile(lats, 99) * 1e3 if n else float("nan"),
+        "avg_ms": float(np.mean(lats) * 1e3) if n else float("nan"),
+    }
+
+
 def ttft_summary(ttfts_s: Sequence[float]) -> Dict[str, float]:
     """Time-to-first-beam-phase distribution (paper §9 staged prefill win).
 

@@ -254,9 +254,10 @@ class PipelinedEngine(GREngine):
             disp, cs = self._decode_group(d, entries, sync_list)
             dispatches += disp
             compile_s += cs
-            if d == nd - 1:
+            ending = [e for e in entries if d == nd - 1 or e.final]
+            if ending:
                 finish.extend((e.req, self._runtimes[e.req.rid])
-                              for e in entries)
+                              for e in ending)
                 # return the finishing requests' pages NOW, before this
                 # step's prefills allocate: the in-flight final decode
                 # reads the pool VALUE it was dispatched with, so a chunk
@@ -264,13 +265,14 @@ class PipelinedEngine(GREngine):
                 # without this, deferring frees to the barrier inflates
                 # peak occupancy past the sequential executor's and forces
                 # pool growth (and larger per-chunk pool copies) it never
-                # pays
-                for e in entries:
+                # pays.  (``e.final`` = phase truncation, ISSUE 9: a
+                # degraded request retires at this phase boundary.)
+                for e in ending:
                     self.arena.release(e.req.rid)
                 self._note_arena()
 
         # --- 2. prefill chunks: staged through round-robin lanes ---------
-        phase0: list = []                       # (req, rt, logits-row)
+        phase0: list = []                       # (req, rt, logits-row, final)
         for e in plan.prefills():
             r = e.req
             rt = self._runtime(r)
@@ -296,7 +298,7 @@ class PipelinedEngine(GREngine):
                 # cache now (host bookkeeping only — the in-flight scatter
                 # is ordered ahead of any adopter by the pool value chain)
                 self._cache_insert(r, rt)
-                phase0.append((r, rt, logits))
+                phase0.append((r, rt, logits, e.final))
             else:
                 sync_list.append(logits)
 
@@ -311,15 +313,15 @@ class PipelinedEngine(GREngine):
             else:
                 out, _, cs = self._async_call(
                     ("phase0-group", G), self._jit_group0,
-                    tuple(lg for _, _, lg in phase0))
+                    tuple(lg for _, _, lg, _ in phase0))
                 states, parents = out
             dispatches += 1
             compile_s += cs
             self._track_pool((0,), requests=G)
-            for i, (r, rt, _) in enumerate(phase0):
+            for i, (r, rt, _, fin) in enumerate(phase0):
                 rt.state = states[i]
                 rt.parent = parents[i]
-                if nd <= 1:
+                if nd <= 1 or fin:
                     finish.append((r, rt))
             sync_list.append(states[-1].tokens)
 

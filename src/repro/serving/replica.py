@@ -32,6 +32,7 @@ from typing import Dict, Optional, Sequence, Union
 import numpy as np
 
 from repro.config import EngineSpec, GRConfig, ModelConfig, ServeConfig
+from repro.serving.admission import CostModel
 from repro.serving.pipeline import make_engine
 from repro.serving.scheduler import SchedulerPolicy, make_policy
 
@@ -53,6 +54,14 @@ class Replica:
         self.completed = 0              # requests that finished here
         self.dispatches = 0             # batches/steps this replica ran
         self.routed_tokens = 0          # cumulative prompt tokens placed
+        #: online admission cost model (ISSUE 9): fed by every executed
+        #: step/batch; prices "can this request still make its deadline?"
+        self.cost_model = CostModel()
+        #: settle-able load accounting (unlike cumulative ``routed_tokens``):
+        #: tokens of currently-placed requests, decremented on settle
+        self.inflight_tokens = 0
+        #: in-flight request count per SLO tier (router fairness, ISSUE 9)
+        self.tier_inflight: Dict[int, int] = {}
 
     # ------------------------------------------------------------- load view
     def queue_depth(self) -> int:
@@ -92,15 +101,50 @@ class ReplicaRouter:
             raise ValueError("router needs >= 1 replica")
         self.replicas = list(replicas)
         self._owner: Dict[int, Replica] = {}
+        #: rid -> (tier, placed tokens): what to un-account at settle time
+        self._load: Dict[int, tuple] = {}
+        self._tiers_seen: set = set()
 
     def place(self, state) -> Replica:
+        tier = int(getattr(state, "tier", 0))
+        self._tiers_seen.add(tier)
+        # Tier fairness (ISSUE 9): among replicas, prefer the one carrying
+        # the FEWEST in-flight requests of this tier, so a hot tenant's
+        # flood spreads instead of starving another tier's home replica.
+        # The component is exactly 0 for single-tier workloads, preserving
+        # the pre-overload placement order bit for bit.
+        fair = len(self._tiers_seen) > 1
         rep = min(self.replicas,
-                  key=lambda r: (r.outstanding_tokens(), r.queue_depth(),
+                  key=lambda r: ((r.tier_inflight.get(tier, 0) if fair
+                                  else 0),
+                                 r.outstanding_tokens(), r.queue_depth(),
                                  r.routed_tokens, r.index))
         self._owner[state.rid] = rep
         rep.submitted += 1
-        rep.routed_tokens += int(state.prompt_len)
+        tokens = int(state.prompt_len)
+        rep.routed_tokens += tokens
+        rep.inflight_tokens += tokens
+        rep.tier_inflight[tier] = rep.tier_inflight.get(tier, 0) + 1
+        self._load[state.rid] = (tier, tokens)
         return rep
+
+    def settle(self, rid: int) -> None:
+        """Retire a placement: the request completed, was aborted, shed, or
+        rejected after placement.  Un-accounts the settle-able load counters
+        (``inflight_tokens``/``tier_inflight``) and drops the owner entry —
+        cumulative ``routed_tokens`` is deliberately left alone.  Idempotent
+        for unknown rids."""
+        rep = self._owner.pop(rid, None)
+        load = self._load.pop(rid, None)
+        if rep is None or load is None:
+            return
+        tier, tokens = load
+        rep.inflight_tokens = max(0, rep.inflight_tokens - tokens)
+        left = rep.tier_inflight.get(tier, 0) - 1
+        if left > 0:
+            rep.tier_inflight[tier] = left
+        else:
+            rep.tier_inflight.pop(tier, None)
 
     def owner(self, rid: int) -> Optional[Replica]:
         return self._owner.get(rid)

@@ -35,6 +35,9 @@ class RequestState:
     tokens: np.ndarray              # (len,) int32 prompt
     arrival_s: float
     deadline_s: Optional[float] = None      # per-request SLO deadline (EDF)
+    #: SLO tier (ISSUE 9): higher = more important.  Scheduling packs
+    #: higher tiers first; shedding/degradation sweep lower tiers first.
+    tier: int = 0
     enqueue_s: Optional[float] = None
     dispatch_s: Optional[float] = None
     finish_s: Optional[float] = None
@@ -47,6 +50,10 @@ class RequestState:
                                     # cache (prefill skipped; ISSUE 6)
     decode_phase: int = 0           # next beam phase to run (1..ND-1)
     first_beam_s: Optional[float] = None    # TTFT point: first beam phase ran
+    # --- graceful degradation (ISSUE 9, shed_policy="degrade") ------------
+    degraded: bool = False          # finished early / narrowed under load
+    served_phases: int = 0          # decode phases actually served (0 = all)
+    served_beam_width: int = 0      # beams returned (0 = full BW)
 
     @property
     def prompt_len(self) -> int:
@@ -98,6 +105,12 @@ class StepEntry:
     chunk_len: int = 0
     last_chunk: bool = False
     decode_phase: int = 0
+    #: phase truncation (ISSUE 9): the engine finalizes the request right
+    #: after this entry runs, even if decode phases remain — set by the
+    #: serving loop's degradation pass, never by the scheduler itself.
+    #: Meaningful on decode entries and on ``last_chunk`` prefill entries
+    #: (finalize straight after beam phase 0).  False = full service.
+    final: bool = False
 
 
 @dataclasses.dataclass

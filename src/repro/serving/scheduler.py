@@ -87,6 +87,12 @@ class SchedulerPolicy(Protocol):
     # :class:`~repro.serving.replica.ReplicaRouter` uses it as its
     # least-outstanding load metric; every shipped policy implements it,
     # and the router falls back to queue depth when a policy does not.
+    #
+    # Policies may also implement ``queued_requests() -> List[RequestState]``
+    # (ISSUE 9): the requests still waiting for their first engine work —
+    # the shed candidates.  The serving loop's overload pass inspects it at
+    # plan time and withdraws expired entries through ``remove``; without
+    # the hook a policy's queue is simply never shed.
 
 
 POLICIES: Dict[str, Callable[..., SchedulerPolicy]] = {}
@@ -185,6 +191,10 @@ class TokenCapacityBatcher:
         the outstanding work."""
         return sum(r.prompt_len for r in self.queue)
 
+    def queued_requests(self) -> List[RequestState]:
+        """Requests awaiting their first dispatch (shed candidates)."""
+        return list(self.queue)
+
     def __len__(self):
         return len(self.queue)
 
@@ -193,12 +203,14 @@ class TokenCapacityBatcher:
 class EDFBatcher(TokenCapacityBatcher):
     """SLO-aware earliest-deadline-first batching.
 
-    The queue is kept sorted by request deadline (``arrival + slo``; per-
-    request SLOs via ``RequestState.deadline_s``, falling back to
-    ``cfg.slo_ms``).  Batch composition follows deadline order, so under
-    capacity pressure the most urgent requests dispatch first.  The wait
-    quota is still measured on enqueue time, keeping the dispatch cadence
-    comparable across policies.
+    The queue is kept sorted by (tier desc, deadline asc): within a tier,
+    earliest deadline first (``arrival + slo``; per-request SLOs via
+    ``RequestState.deadline_s``, falling back to ``cfg.slo_ms``), and a
+    higher SLO tier always outranks a lower one (ISSUE 9 — with the default
+    uniform tier the order is exactly plain EDF).  Batch composition
+    follows that order, so under capacity pressure the most urgent requests
+    dispatch first.  The wait quota is still measured on enqueue time,
+    keeping the dispatch cadence comparable across policies.
     """
 
     def _deadline(self, req: RequestState) -> float:
@@ -206,13 +218,16 @@ class EDFBatcher(TokenCapacityBatcher):
             return req.deadline_s
         return req.arrival_s + self.cfg.slo_ms / 1e3
 
+    def _key(self, req: RequestState):
+        return (-req.tier, self._deadline(req))
+
     def add(self, req: RequestState, now_s: float):
         req.enqueue_s = now_s
-        dl = self._deadline(req)
-        # insert keeping deadline order (queues are short: <= a few batches)
+        key = self._key(req)
+        # insert keeping (tier, deadline) order (queues are short)
         pos = len(self.queue)
         for i, q in enumerate(self.queue):
-            if dl < self._deadline(q):
+            if key < self._key(q):
                 pos = i
                 break
         self.queue.insert(pos, req)
@@ -298,6 +313,10 @@ class BucketAffinityBatcher:
         return sum(r.prompt_len
                    for q in self.buckets.values() for r in q)
 
+    def queued_requests(self) -> List[RequestState]:
+        """Requests awaiting their first dispatch (shed candidates)."""
+        return [r for q in self.buckets.values() for r in q]
+
     def __len__(self):
         return sum(len(q) for q in self.buckets.values())
 
@@ -366,11 +385,18 @@ class ChunkedPrefillScheduler:
         return len(self.waiting)
 
     def remove(self, rid: int) -> bool:
-        """Drop a waiting or active request (``ServingSystem.abort``)."""
+        """Drop a waiting or active request (``ServingSystem.abort`` and
+        the overload shed pass)."""
         n = len(self.waiting) + len(self.active)
         self.waiting = deque(r for r in self.waiting if r.rid != rid)
         self.active = [r for r in self.active if r.rid != rid]
         return len(self.waiting) + len(self.active) != n
+
+    def queued_requests(self) -> List[RequestState]:
+        """Requests awaiting admission (shed candidates, ISSUE 9): only the
+        waiting set — admitted requests hold engine state and degrade
+        instead of shedding."""
+        return list(self.waiting)
 
     def outstanding_tokens(self) -> int:
         """Tokens of work still owed across waiting AND active requests
@@ -392,7 +418,14 @@ class ChunkedPrefillScheduler:
         return bool(self.waiting or self.active)
 
     def admit(self, now_s: float):
-        """Move arrivals into the active set up to ``max_batch_requests``."""
+        """Move arrivals into the active set up to ``max_batch_requests``.
+
+        With mixed SLO tiers waiting, higher tiers are admitted first
+        (stable within a tier, so uniform-tier traffic keeps the exact
+        FIFO admission order — the bit-identity gate of ISSUE 9)."""
+        if len({r.tier for r in self.waiting}) > 1:
+            self.waiting = deque(sorted(self.waiting,
+                                        key=lambda r: -r.tier))
         while self.waiting and len(self.active) < self.cfg.max_batch_requests:
             req = self.waiting.popleft()
             req.phase = Phase.PREFILLING
@@ -413,6 +446,12 @@ class ChunkedPrefillScheduler:
         budget = max(1, self.cfg.prefill_chunk_tokens)
         prefilling = [r for r in self.active if r.phase is Phase.PREFILLING]
         decoding = [r for r in self.active if r.phase is Phase.DECODING]
+        if len({r.tier for r in self.active}) > 1:
+            # SLO-tier fairness (ISSUE 9): higher tiers claim the step
+            # budget first; stable sort keeps FIFO order within a tier
+            # (identity under the default uniform tier)
+            prefilling.sort(key=lambda r: -r.tier)
+            decoding.sort(key=lambda r: -r.tier)
         reserve = (max(1, budget // self.PREFILL_RESERVE)
                    if prefilling else 0)
         entries: List[StepEntry] = []
@@ -467,7 +506,9 @@ class ChunkedPrefillScheduler:
 
     def commit(self, plan: StepPlan):
         """Apply a planned step's phase transitions (host bookkeeping only —
-        the engine runs the numerics; tests drive the policy without it)."""
+        the engine runs the numerics; tests drive the policy without it).
+        An entry marked ``final`` (phase truncation, ISSUE 9) retires its
+        request at that phase boundary regardless of phases remaining."""
         nd = self.num_decode_phases
         for e in plan.entries:
             r = e.req
@@ -476,13 +517,13 @@ class ChunkedPrefillScheduler:
                 if e.last_chunk:
                     # beam phase 0 consumes the final chunk's logits in the
                     # same step; remaining work is phases 1..ND-1
-                    if nd <= 1:
+                    if nd <= 1 or e.final:
                         r.phase = Phase.DONE
                     else:
                         r.phase = Phase.DECODING
                         r.decode_phase = 1
             else:
                 r.decode_phase += 1
-                if r.decode_phase >= nd:
+                if r.decode_phase >= nd or e.final:
                     r.phase = Phase.DONE
         self.active = [r for r in self.active if r.phase is not Phase.DONE]

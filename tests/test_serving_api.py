@@ -138,15 +138,39 @@ def test_step_walks_successive_deadlines():
     assert times == [pytest.approx(0.005), pytest.approx(0.006)]
 
 
-def test_out_of_order_submit_keeps_true_arrival():
+def test_out_of_order_submit_clamps_to_clock_and_warns():
+    """S1 (ISSUE 9): the simulated clock is monotonic, so a submit cannot
+    arrive in the past.  The system used to silently keep the stale
+    timestamp, inflating every latency derived from it; now it clamps to
+    the current clock and warns."""
     sys_, eng = _system()
     sys_.submit(_tok(10), arrival_s=1.0)          # clock -> 1.0
-    late = sys_.submit(_tok(10), arrival_s=0.4)   # enqueues at the clock
+    with pytest.warns(UserWarning, match="earlier than the simulated"):
+        late = sys_.submit(_tok(10), arrival_s=0.4)
     sys_.step(2.0)
     r = late.result()
-    assert r.arrival_s == pytest.approx(0.4)      # true arrival preserved
-    assert r.dispatch_s >= 1.0                    # but served after the clock
-    assert r.latency_s == pytest.approx(r.finish_s - 0.4)
+    assert r.arrival_s == pytest.approx(1.0)      # clamped, not back-dated
+    assert r.dispatch_s >= 1.0                    # served after the clock
+    assert r.latency_s == pytest.approx(r.finish_s - 1.0)
+    assert r.latency_s <= r.finish_s - 0.4        # no phantom queue time
+
+
+def test_out_of_order_burst_latencies_stay_nonnegative():
+    """S1 regression: a burst whose arrivals interleave out of order must
+    yield per-request queue/latency numbers measured from the clamped
+    (clock) arrival — all nonnegative, no phantom wait inherited from a
+    back-dated timestamp."""
+    sys_, eng = _system()
+    arrivals = [0.0, 0.5, 0.2, 0.7, 0.1]          # deliberately unsorted
+    with pytest.warns(UserWarning):
+        hs = [sys_.submit(_tok(10), arrival_s=a) for a in arrivals]
+    sys_.drain()
+    for h, a in zip(hs, arrivals):
+        r = h.result()
+        assert r.arrival_s >= a                   # never earlier than asked
+        assert r.queue_s >= -1e-12
+        assert r.latency_s >= -1e-12
+        assert r.dispatch_s >= r.arrival_s
 
 
 def test_streams_serialize_when_busy():
