@@ -45,6 +45,7 @@ ordering, not absolute numbers, is the reproduction target.
 
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -110,10 +111,15 @@ def beam_select_modes(cfg, gr, catalog, trie, params):
             f";sort_saved={bp['saved_fraction']*100:.0f}%")
 
 
-def pipeline_executors(cfg, gr, catalog, trie, params):
+def pipeline_executors(cfg, gr, catalog, trie, params, trace_out=None):
     """ISSUE 5: mixed long/short chunked traffic, sequential vs pipelined
     step executor — dispatch-count reduction, batched decode width, and the
-    p99 TTFT/latency win, recorded to the standard bench JSON."""
+    p99 TTFT/latency win, recorded to the standard bench JSON.
+
+    ``trace_out`` (ISSUE 10) turns the flight recorder on — bit-identical
+    results, same selections — and writes the pipelined run's Chrome/
+    Perfetto trace JSON there, plus the per-stage breakdown and the
+    barrier-span vs ``sync_stall_s`` reconciliation into the record."""
     short = gen_histories(catalog, 40, max_tokens=48, seed=8)
     long_ = gen_histories(catalog, 6, max_tokens=384, min_tokens=300, seed=9)
     hist = []
@@ -126,10 +132,27 @@ def pipeline_executors(cfg, gr, catalog, trie, params):
         scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
                            batch_wait_quota_ms=5.0, num_streams=2,
                            scheduler_policy="chunked",
-                           prefill_chunk_tokens=128, executor=executor)
+                           prefill_chunk_tokens=128, executor=executor,
+                           trace=trace_out is not None)
         eng = make_engine(cfg, gr, params, trie, scfg,
                           spec=EngineSpec(backend="graph", num_streams=2))
         rep = run_server(eng, trace, scfg)
+        if trace_out is not None and executor == "pipelined":
+            tr = rep.tracer
+            tr.write_chrome_trace(trace_out)
+            barrier_s = sum(e.dur for e in tr.events
+                            if e.kind == "X" and e.name == "barrier")
+            stall_s = rep.pipeline["sync_stall_s"]
+            record["trace"] = {
+                "path": os.path.abspath(trace_out),
+                "events": len(tr.events), "dropped": tr.dropped,
+                "barrier_span_s": barrier_s, "sync_stall_s": stall_s,
+                "stages": rep.stages,
+            }
+            row("pipeline_trace", len(tr.events),
+                f"events={len(tr.events)}"
+                f";barrier_span_s={barrier_s:.3f}"
+                f";sync_stall_s={stall_s:.3f};out={trace_out}")
         s, t, pl, es = rep.summary, rep.ttft, rep.pipeline, rep.engine_stats
         record[executor] = {
             "p99_ms": s["p99_ms"], "avg_ms": s["avg_ms"],
@@ -310,7 +333,12 @@ def sharded():
             [-300:])
 
 
-def main():
+SCENARIOS = ("fig13", "mixed_prefill", "beam_select", "pipeline",
+             "prefix_reuse", "sharded")
+
+
+def main(scenarios=None, trace_out=None):
+    scenarios = set(scenarios or SCENARIOS)
     cfg = get_config("onerec-0.1b").reduced()
     gr = GRConfig(beam_width=16, top_k=16, num_decode_phases=3,
                   num_items=2000, tid_vocab=cfg.vocab_size)
@@ -326,32 +354,54 @@ def main():
         "paged_baseline": EngineSpec(backend="eager", attention_impl="paged",
                                      num_streams=1, host_overlap=False),
     }
-    for rps in (50, 100, 200):
-        trace = poisson_trace(hist, rps=rps, duration_s=max(0.5, 40 / rps),
-                              seed=2)
-        for name, spec in variants.items():
-            scfg = ServeConfig(max_batch_tokens=4096, max_batch_requests=8,
-                               batch_wait_quota_ms=5.0,
-                               num_streams=spec.num_streams,
-                               graph_dispatch=spec.backend == "graph")
-            eng = GREngine(cfg, gr, params, trie, scfg, spec=spec)
-            rep = run_server(eng, trace, scfg)
-            s = rep.summary
-            row(f"fig13_{name}_rps{rps}",
-                s["avg_ms"] * 1e3,
-                f"p99_ms={s['p99_ms']:.1f};avg_ms={s['avg_ms']:.1f}"
-                f";reqs={s['requests']}"
-                f";slo_viol={rep.slo_violations}"
-                f";disp_per_batch={rep.engine_stats['dispatches_per_batch']:.0f}")
-    mixed_prefill(cfg, gr, catalog, trie, params)
-    beam_select_modes(cfg, gr, catalog, trie, params)
-    pipeline_executors(cfg, gr, catalog, trie, params)
-    prefix_reuse(cfg, gr, catalog, trie, params)
-    sharded()
+    if "fig13" in scenarios:
+        for rps in (50, 100, 200):
+            trace = poisson_trace(hist, rps=rps,
+                                  duration_s=max(0.5, 40 / rps), seed=2)
+            for name, spec in variants.items():
+                scfg = ServeConfig(max_batch_tokens=4096,
+                                   max_batch_requests=8,
+                                   batch_wait_quota_ms=5.0,
+                                   num_streams=spec.num_streams,
+                                   graph_dispatch=spec.backend == "graph")
+                eng = GREngine(cfg, gr, params, trie, scfg, spec=spec)
+                rep = run_server(eng, trace, scfg)
+                s = rep.summary
+                row(f"fig13_{name}_rps{rps}",
+                    s["avg_ms"] * 1e3,
+                    f"p99_ms={s['p99_ms']:.1f};avg_ms={s['avg_ms']:.1f}"
+                    f";reqs={s['requests']}"
+                    f";slo_viol={rep.slo_violations}"
+                    f";disp_per_batch="
+                    f"{rep.engine_stats['dispatches_per_batch']:.0f}")
+    if "mixed_prefill" in scenarios:
+        mixed_prefill(cfg, gr, catalog, trie, params)
+    if "beam_select" in scenarios:
+        beam_select_modes(cfg, gr, catalog, trie, params)
+    if "pipeline" in scenarios:
+        pipeline_executors(cfg, gr, catalog, trie, params,
+                           trace_out=trace_out)
+    if "prefix_reuse" in scenarios:
+        prefix_reuse(cfg, gr, catalog, trie, params)
+    if "sharded" in scenarios:
+        sharded()
 
 
 if __name__ == "__main__":
     if "--sharded-worker" in sys.argv:
         sharded_worker()
     else:
-        main()
+        ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+        ap.add_argument("scenario", nargs="*", metavar="scenario",
+                        help=f"scenarios to run (default: all); "
+                             f"from: {', '.join(SCENARIOS)}")
+        ap.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="write the pipeline scenario's Chrome/Perfetto "
+                             "trace JSON here (ISSUE 10 flight recorder; "
+                             "open in ui.perfetto.dev)")
+        args = ap.parse_args()
+        unknown = set(args.scenario) - set(SCENARIOS)
+        if unknown:
+            ap.error(f"unknown scenario(s) {sorted(unknown)}; "
+                     f"choose from {', '.join(SCENARIOS)}")
+        main(scenarios=args.scenario or None, trace_out=args.trace_out)

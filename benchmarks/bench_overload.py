@@ -27,6 +27,9 @@ honest number an overload controller is buying.  The record lands in
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
+
 import jax
 import numpy as np
 
@@ -72,12 +75,20 @@ def calibrate(cfg, gr, params, trie, histories) -> dict:
             "service_rps": n / total_s, "service_ms": total_s / n * 1e3}
 
 
-def run_once(cfg, gr, params, trie, trace, scfg) -> dict:
+def run_once(cfg, gr, params, trie, trace, scfg,
+             trace_out: str = None) -> dict:
+    if trace_out is not None:
+        scfg = dataclasses.replace(scfg, trace=True)
     system = ServingSystem(_engine(cfg, gr, params, trie, scfg), scfg)
     for r in sorted(trace, key=lambda r: r.arrival_s):
         system.submit(r.tokens, arrival_s=r.arrival_s, rid=r.rid,
                       slo_ms=r.slo_ms, tier=r.tier)
     system.drain()
+    if trace_out is not None:
+        system.tracer.write_chrome_trace(trace_out)
+        row("overload_trace", len(system.tracer.events),
+            f"events={len(system.tracer.events)}"
+            f";dropped={system.tracer.dropped};out={trace_out}")
     done = system.completed
     all_res = system.dispositions()
     duration = max((r.finish_s for r in all_res), default=0.0)
@@ -103,7 +114,7 @@ def run_once(cfg, gr, params, trie, trace, scfg) -> dict:
     }
 
 
-def main():
+def main(trace_out: str = None):
     cfg = get_config("onerec-0.1b").reduced()
     gr = GRConfig(beam_width=8, top_k=8, num_decode_phases=3,
                   num_items=500, tid_vocab=cfg.vocab_size)
@@ -120,21 +131,30 @@ def main():
 
     record = {"scenario": "overload", "calibration": cal,
               "slo_ms": slo_ms, "tier_mix": [list(t) for t in TIER_MIX],
-              "sweep": []}
+              "length_dist": "lognormal", "sweep": []}
     slo_by_tier = {t: slo_ms for t, _ in TIER_MIX}
     for mult in MULTIPLIERS:
         rps = mult * cal["service_rps"]
+        # heavy-tailed prompt lengths (ISSUE 10 satellite): real GR traffic
+        # has power-law user histories, so the sweep resamples each
+        # request's length lognormally around the history mean — the
+        # length-distribution stats land in the record next to each point
         trace = make_trace(hist, rps=rps, duration_s=1.0, shape="burst",
                            tier_mix=TIER_MIX, slo_ms_by_tier=slo_by_tier,
                            burst_factor=3.0, burst_period_s=0.25,
-                           burst_duty=0.3, seed=31)
+                           burst_duty=0.3, length_dist="lognormal",
+                           length_sigma=0.6, min_length=16, seed=31)
         ts = trace_stats(trace)
         point = {"multiplier": mult, "offered_rps": rps,
                  "trace": {k: v for k, v in ts.items() if k != "tiers"},
                  "policies": {}}
         for pol in POLICIES:
+            # flight-recorder export for the saturated degrade point (the
+            # most interesting timeline: shed + degrade decisions visible)
+            out = (trace_out if trace_out is not None and mult == 2.0
+                   and pol == "degrade" else None)
             res = run_once(cfg, gr, params, trie, trace,
-                           _serve_cfg(pol, slo_ms))
+                           _serve_cfg(pol, slo_ms), trace_out=out)
             point["policies"][pol] = res
             row(f"overload_x{mult:g}_{pol}", res["p99_admitted_ms"] * 1e3,
                 f"goodput_rps={res['goodput_rps']:.1f}"
@@ -171,4 +191,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the 2x-saturation degrade run's Chrome/"
+                         "Perfetto trace JSON here (ISSUE 10 flight "
+                         "recorder; open in ui.perfetto.dev)")
+    main(trace_out=ap.parse_args().trace_out)

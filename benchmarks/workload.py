@@ -77,20 +77,60 @@ def arrival_times(rps: float, duration_s: float, shape: str = "constant",
     return np.asarray(out, np.float64)
 
 
+def sample_length(rng: np.random.Generator, dist: str, mean: float,
+                  lo: int, hi: int, *, sigma: float = 0.8,
+                  alpha: float = 1.5) -> int:
+    """One prompt length from a heavy-tailed distribution, clipped to
+    ``[lo, hi]``.
+
+    * ``"lognormal"`` — ``mu = log(mean) - sigma^2/2`` so the UNCLIPPED
+      mean is exactly ``mean``; ``sigma`` controls tail weight.
+    * ``"pareto"`` — ``x_min * (1 + Pareto(alpha))`` with ``x_min`` set so
+      the unclipped mean is ``mean`` (needs ``alpha > 1``); the classic
+      power-law user-history tail.
+    """
+    mean = max(float(mean), 1.0)
+    if dist == "lognormal":
+        mu = math.log(mean) - 0.5 * sigma * sigma
+        x = rng.lognormal(mu, sigma)
+    elif dist == "pareto":
+        if alpha <= 1.0:
+            raise ValueError("pareto length sampling needs alpha > 1")
+        x_min = mean * (alpha - 1.0) / alpha
+        x = x_min * (1.0 + rng.pareto(alpha))
+    else:
+        raise ValueError(f"unknown length dist {dist!r}; "
+                         f"have ['lognormal', 'pareto']")
+    return int(np.clip(round(x), lo, hi))
+
+
 def make_trace(histories: Sequence[np.ndarray], rps: float,
                duration_s: float, shape: str = "constant", *,
                tier_mix: Sequence[Tuple[int, float]] = ((0, 1.0),),
                slo_ms_by_tier: Optional[Dict[int, float]] = None,
                diurnal_amplitude: float = 0.6,
                burst_factor: float = 4.0, burst_period_s: float = 1.0,
-               burst_duty: float = 0.25, seed: int = 0) -> List[GRRequest]:
+               burst_duty: float = 0.25,
+               length_dist: Optional[str] = None,
+               length_mean: Optional[float] = None,
+               length_sigma: float = 0.8, length_alpha: float = 1.5,
+               min_length: int = 1, seed: int = 0) -> List[GRRequest]:
     """Full open-loop trace: thinned arrivals x history sampling x tier mix.
 
     ``histories`` supplies the (heavy-tailed) prompt population — e.g.
     :func:`repro.data.synthetic.gen_histories`; each arrival samples one
     uniformly.  ``tier_mix`` is ``[(tier, weight), ...]``;
     ``slo_ms_by_tier`` optionally stamps a per-request deadline per tier
-    (unlisted tiers fall back to the config-wide SLO)."""
+    (unlisted tiers fall back to the config-wide SLO).
+
+    ``length_dist`` (``"lognormal"`` / ``"pareto"``) additionally resamples
+    each request's PROMPT LENGTH from a heavy-tailed distribution with mean
+    ``length_mean`` (default: the histories' own mean length), truncating
+    the sampled history to the drawn length — so the token *content* still
+    comes from the history population (prefix-cache hits stay realistic)
+    while the length *distribution* gets the power-law tail real user
+    histories show.  ``None`` (default) keeps the histories' native
+    lengths, byte-identical to the pre-ISSUE-10 generator."""
     if not histories:
         raise ValueError("make_trace needs at least one history")
     times = arrival_times(rps, duration_s, shape,
@@ -105,10 +145,17 @@ def make_trace(histories: Sequence[np.ndarray], rps: float,
         raise ValueError("tier_mix weights must sum > 0")
     w = w / w.sum()
     slo_ms_by_tier = slo_ms_by_tier or {}
+    if length_dist is not None and length_mean is None:
+        length_mean = float(np.mean([len(h) for h in histories]))
     reqs = []
     for rid, at in enumerate(times):
         tier = int(rng.choice(tiers, p=w))
         hist = histories[int(rng.integers(len(histories)))]
+        if length_dist is not None:
+            n = sample_length(rng, length_dist, length_mean,
+                              max(int(min_length), 1), len(hist),
+                              sigma=length_sigma, alpha=length_alpha)
+            hist = hist[:n]
         reqs.append(GRRequest(
             rid=rid, tokens=hist, arrival_s=float(at), tier=tier,
             slo_ms=slo_ms_by_tier.get(tier)))
@@ -127,8 +174,11 @@ def trace_stats(trace: Sequence[GRRequest]) -> Dict[str, float]:
         tiers[r.tier] = tiers.get(r.tier, 0) + 1
     return {
         "requests": len(trace),
-        "mean_rps": len(trace) / span if span > 0 else float("nan"),
+        "mean_rps": len(trace) / span if span > 0 else 0.0,
         "prompt_mean": float(lens.mean()),
+        "prompt_p50": float(np.percentile(lens, 50)),
+        "prompt_p90": float(np.percentile(lens, 90)),
         "prompt_p99": float(np.percentile(lens, 99)),
+        "prompt_max": int(lens.max()),
         "tiers": tiers,
     }

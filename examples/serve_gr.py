@@ -39,6 +39,13 @@ Run:  PYTHONPATH=src python examples/serve_gr.py [--rps 100] [--seconds 1.0]
       [--queue-timeout-ms 50]   (shed queued requests older than this)
       [--slo-tier 1]   (SLO tier for the whole trace; higher = served
                         first, shed last)
+      [--trace-out trace.json]   (flight recorder, DESIGN §13: record every
+                          lifecycle point — queue wait, prefill chunks,
+                          batched decode, pipeline lanes, barrier waits,
+                          cache/arena events — and write Chrome/Perfetto
+                          trace JSON; open in ui.perfetto.dev.  Also prints
+                          the per-stage breakdown and a Prometheus-style
+                          metrics snapshot.  Bit-identical results.)
 """
 
 import argparse
@@ -114,6 +121,10 @@ def main():
     ap.add_argument("--slo-tier", type=int, default=0,
                     help="SLO tier stamped on every request (higher = more "
                          "important; shedding sweeps lower tiers first)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="record a flight-recorder trace and write Chrome/"
+                         "Perfetto trace_event JSON here (DESIGN §13; "
+                         "bit-identical results)")
     args = ap.parse_args()
 
     cfg = get_config("onerec-0.1b").reduced()
@@ -154,7 +165,8 @@ def main():
                        attention_impl=args.attn_impl,
                        beam_early_term=args.early_term,
                        shed_policy=args.shed_policy,
-                       queue_timeout_ms=args.queue_timeout_ms)
+                       queue_timeout_ms=args.queue_timeout_ms,
+                       trace=bool(args.trace_out))
     spec = dataclasses.replace(spec, beam_select=args.beam_select)
     if args.attn_impl:
         spec = dataclasses.replace(spec, attention_impl=args.attn_impl)
@@ -243,6 +255,23 @@ def main():
               f"({c['rejected']} rejected, {c['shed']} shed, "
               f"{c['degraded']} degraded), "
               f"{ov['deadline_misses']} deadline misses among admitted")
+    if args.trace_out:
+        tr = system.tracer
+        path = tr.write_chrome_trace(args.trace_out)
+        print(f"  trace      : {len(tr.events)} events "
+              f"({tr.dropped} dropped) -> {path} "
+              f"(open in ui.perfetto.dev)")
+        for stage, st in tr.stage_summary().items():
+            print(f"    {stage:<10}: n={st['count']:<4} "
+                  f"avg {st['avg_ms']:.2f} ms | p99 {st['p99_ms']:.2f} "
+                  f"| total {st['total_ms']:.1f}")
+        prom = tr.to_prometheus()
+        head = [ln for ln in prom.splitlines()
+                if ln.startswith("xgr_requests_")]
+        print("    prometheus snapshot "
+              f"({len(prom.splitlines())} lines):")
+        for ln in head[:6]:
+            print(f"      {ln}")
     r0 = results[0]
     if "batch_size" in r0.timing:
         shape = (f"in a {int(r0.timing['batch_size'])}-request batch "

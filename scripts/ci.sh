@@ -8,6 +8,9 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 echo "== tier-1 tests (-m 'not slow') =="
 python -m pytest -q -m "not slow"
 
+echo "== bench regression gate + trace-export smoke (ISSUE 10) =="
+python scripts/check_bench.py
+
 echo "== facade smoke: submit/step/drain =="
 python - <<'EOF'
 import jax, numpy as np

@@ -336,6 +336,14 @@ class ServeConfig:
     #: beam width served by a degraded request (top rows of the SAME beam
     #: state — an exact subset of the full-width selection); 0 = BW // 2
     degrade_beam_width: int = 0
+    #: flight recorder (ISSUE 10): record span/counter telemetry at every
+    #: lifecycle point into ``ServingSystem.tracer``.  Off by default —
+    #: disabled tracing is bit-identical to the uninstrumented stack, and
+    #: enabling it changes no scheduling/selection decisions (timestamps
+    #: are only read, never synced on)
+    trace: bool = False
+    #: ring-buffer capacity (events) of the flight recorder
+    trace_capacity: int = 262144
 
 
 @dataclass(frozen=True)

@@ -170,6 +170,10 @@ class KVArena:
         #: cache registers its LRU eviction here).  Must not allocate.
         self._pressure: Optional[Callable[[int], int]] = None
         self.stats = ArenaStats()
+        #: flight recorder (ISSUE 10) — duck-typed, wired through
+        #: ``GREngine.set_tracer``; the arena never imports serving code
+        self.tracer = None
+        self.trace_replica = 0
 
     # ------------------------------------------------------------ geometry
     @property
@@ -299,6 +303,15 @@ class KVArena:
         table = np.asarray(list(map(int, shared)) + fresh, np.int32)
         self._tables[rid] = table
         self.stats.allocs += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("arena_alloc", tr.now(), replica=self.trace_replica,
+                       track="engine", rid=rid,
+                       args={"pages": need, "shared": len(shared),
+                             "fresh": len(fresh)})
+            tr.count("arena_alloc_pages", len(fresh))
+            tr.gauge("arena_pages_used", self.pages_used,
+                     replica=self.trace_replica)
         return table.copy()
 
     def free(self, rid: int) -> int:
@@ -310,6 +323,13 @@ class KVArena:
         for p in table:
             self.decref(int(p))
         self.stats.frees += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("arena_free", tr.now(), replica=self.trace_replica,
+                       track="engine", rid=rid,
+                       args={"pages": len(table)})
+            tr.gauge("arena_pages_used", self.pages_used,
+                     replica=self.trace_replica)
         return len(table)
 
     def release(self, rid: int) -> int:
@@ -383,6 +403,12 @@ class KVArena:
         self.pages_v = self._place(jnp.pad(self.pages_v, pad))
         self._free[:0] = list(range(old + extra - 1, old - 1, -1))
         self.stats.grows += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("arena_grow", tr.now(), replica=self.trace_replica,
+                       track="engine",
+                       args={"old_pages": old, "new_pages": old + extra})
+            tr.count("arena_grows")
 
     def _place(self, arr: jax.Array) -> jax.Array:
         return arr if self._sharding is None \

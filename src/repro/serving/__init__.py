@@ -18,6 +18,7 @@ from repro.serving.scheduler import (BucketAffinityBatcher,
                                      available_policies, bucket_len,
                                      make_policy, register_policy)
 from repro.serving.server import ServerReport, run_server
+from repro.serving.telemetry import Tracer
 
 __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
            "GREngine", "EngineStats", "merge_engine_stats",
@@ -34,4 +35,5 @@ __all__ = ["ServingSystem", "RequestHandle", "ServeResult",
            "BucketAffinityBatcher", "ChunkedPrefillScheduler",
            "available_policies", "make_policy",
            "register_policy", "bucket_len",
-           "ServerReport", "run_server"]
+           "ServerReport", "run_server",
+           "Tracer"]

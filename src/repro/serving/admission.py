@@ -36,6 +36,11 @@ class CostModel:
     cost_per_token: float = 0.0     # seconds per scheduled token
     step_s: float = 0.0             # seconds per engine step/batch
     steps: int = 0                  # observations so far
+    #: flight recorder (ISSUE 10), wired by ServingSystem when tracing —
+    #: exports the calibrated EWMAs as gauges so overload traces show what
+    #: the admission controller believed at scrape time
+    tracer: object = None
+    trace_replica: int = 0
 
     def observe(self, tokens: float, seconds: float) -> None:
         """Feed one executed step/batch: its scheduled token cost and its
@@ -51,6 +56,12 @@ class CostModel:
             self.cost_per_token = a * cpt + (1 - a) * self.cost_per_token
             self.step_s = a * seconds + (1 - a) * self.step_s
         self.steps += 1
+        if self.tracer is not None:
+            self.tracer.gauge("admission_cost_per_token_us",
+                              self.cost_per_token * 1e6,
+                              replica=self.trace_replica)
+            self.tracer.gauge("admission_step_ms", self.step_s * 1e3,
+                              replica=self.trace_replica)
 
     def ready(self) -> bool:
         """True once enough steps were observed to trust predictions —

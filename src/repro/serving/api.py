@@ -44,6 +44,7 @@ from repro.serving.engine import GREngine, merge_engine_stats
 from repro.serving.replica import Replica, ReplicaRouter
 from repro.serving.request import BatchPlan, Phase, RequestState
 from repro.serving.scheduler import SchedulerPolicy, make_policy
+from repro.serving.telemetry import Tracer
 
 
 @dataclasses.dataclass
@@ -84,6 +85,11 @@ class ServeResult:
     #: batch's engine breakdown (device_s / host_mask_s / critical_s /
     #: compile_s / dispatches) and shape (batch_size, bucket_len).
     timing: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: flight-recorder waterfall (ISSUE 10): ``[(name, t0_s, t1_s), ...]``
+    #: simulated-clock spans this request passed through (queued, prefill
+    #: chunks, decode phases, barrier waits).  None unless
+    #: ``serve_cfg.trace`` was on.
+    spans: Optional[List] = None
 
     @property
     def ok(self) -> bool:
@@ -216,6 +222,25 @@ class ServingSystem:
         if self._continuous:
             for rep in self.replicas:
                 self._wire_continuous(rep, min_bucket)
+        # flight recorder (ISSUE 10): built only when asked for — every
+        # instrumentation site below guards on ``tracer is not None`` so
+        # the off path stays bit-identical to the uninstrumented system
+        self.tracer: Optional[Tracer] = None
+        if bool(getattr(cfg, "trace", False)):
+            self.tracer = Tracer(
+                capacity=int(getattr(cfg, "trace_capacity", 0)) or 262144)
+            self._wire_tracer(self.tracer)
+
+    def _wire_tracer(self, tracer: Tracer) -> None:
+        """Hand the tracer to every component that records into it."""
+        self.router.tracer = tracer
+        for rep in self.replicas:
+            if hasattr(rep.engine, "set_tracer"):
+                rep.engine.set_tracer(tracer, rep.index)
+            rep.policy.tracer = tracer
+            rep.policy.trace_replica = rep.index
+            rep.cost_model.tracer = tracer
+            rep.cost_model.trace_replica = rep.index
 
     def _wire_continuous(self, rep: Replica, min_bucket: int) -> None:
         """Inject the engine-derived hooks a continuous policy needs."""
@@ -309,6 +334,16 @@ class ServingSystem:
                              deadline_s=deadline, tier=int(tier))
         self.counters["submitted"] += 1
         self._tier_count(state.tier, "submitted")
+        tr = self.tracer
+        if tr is not None:
+            tr.set_time(self._now)
+            tr.count("requests_submitted", tier=state.tier)
+            tr.request_begin(rid, arrival_s,
+                             args={"prompt_len": state.prompt_len,
+                                   "tier": state.tier})
+            tr.instant("submit", arrival_s, rid=rid,
+                       args={"prompt_len": state.prompt_len,
+                             "tier": state.tier})
         # admission control (ISSUE 9): if the BEST predicted completion
         # across the fleet already misses the deadline, reject now —
         # dispatching it would only burn capacity on a guaranteed miss
@@ -380,6 +415,14 @@ class ServingSystem:
         self._results[state.rid] = res
         self.counters[status] += 1
         self._tier_count(state.tier, status)
+        tr = self.tracer
+        if tr is not None:
+            tr.count("requests_" + status, tier=state.tier)
+            tr.instant(status, t, rid=state.rid,
+                       args={"queued_s": t - state.arrival_s,
+                             "tier": state.tier})
+            tr.request_end(state.rid, t, status)
+            tr.take_request_spans(state.rid)
         return RequestHandle(self, state)
 
     def _shed_queued(self, rep: Replica, t: float) -> None:
@@ -448,6 +491,12 @@ class ServingSystem:
                     r.degraded = True
                     r.served_phases = e.decode_phase + 1
                     r.served_beam_width = min(dbw, bw) if bw else dbw
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "degrade", t, replica=rep.index,
+                            track="scheduler", rid=r.rid,
+                            args={"at_phase": e.decode_phase,
+                                  "beam_width": r.served_beam_width})
             elif e.kind == "prefill" and e.last_chunk:
                 # after this chunk: beam phase 0 now, nd - 1 decode steps
                 if t + cm.step_s * max(nd, 1) > r.deadline_s:
@@ -456,6 +505,12 @@ class ServingSystem:
                     r.degraded = True
                     r.served_phases = 1
                     r.served_beam_width = min(dbw, bw) if bw else dbw
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "degrade", t, replica=rep.index,
+                            track="scheduler", rid=r.rid,
+                            args={"at_phase": 0,
+                                  "beam_width": r.served_beam_width})
 
     def step(self, now_s: Optional[float] = None) -> List[ServeResult]:
         """Advance the simulated clock to ``now_s``, dispatching every batch
@@ -553,6 +608,10 @@ class ServingSystem:
                     rep.engine.release(rid)
                 self.router.settle(rid)
                 self.counters["aborted"] += 1
+                if self.tracer is not None:
+                    self.tracer.count("requests_aborted")
+                    self.tracer.request_end(rid, self._now, "aborted")
+                    self.tracer.take_request_spans(rid)
                 return True
         return False
 
@@ -588,6 +647,9 @@ class ServingSystem:
                         self.counters["aborted"] += 1
                     self._aborted.add(rid)
                     self.router.settle(rid)
+                    if self.tracer is not None:
+                        self.tracer.request_end(rid, self._now, "aborted")
+                        self.tracer.take_request_spans(rid)
 
     def _earliest_deadline(self):
         """(replica, deadline) with the earliest pending quota deadline
@@ -624,6 +686,9 @@ class ServingSystem:
             if not candidates:
                 break
             t, _, rep = min(candidates)
+            tr = self.tracer
+            if tr is not None:
+                tr.set_time(t)          # engine spans start at this sim time
             self._shed_queued(rep, t)   # dead queued work never dispatches
             rep.policy.admit(t)
             plan = rep.policy.plan_step(t)
@@ -641,6 +706,10 @@ class ServingSystem:
                 r = e.req
                 if r.dispatch_s is None:
                     r.dispatch_s = t                # first time on-engine
+                    if tr is not None:
+                        tr.observe("stage_seconds", t - r.arrival_s,
+                                   stage="queue")
+                        tr.request_span(r.rid, "queued", r.arrival_s, t)
                 if e.kind == "prefill" and e.last_chunk:
                     r.first_beam_s = end            # TTFT point
                 if r.phase is Phase.DONE and r.rid not in self._results:
@@ -664,6 +733,12 @@ class ServingSystem:
                         timing={"queue_s": r.dispatch_s - r.arrival_s,
                                 "step_tokens": float(plan.token_cost),
                                 **timing})
+                    if tr is not None:
+                        tr.count("requests_completed", tier=r.tier)
+                        if r.degraded:
+                            tr.count("requests_degraded", tier=r.tier)
+                        tr.request_end(r.rid, end, "completed")
+                        res.spans = tr.take_request_spans(r.rid)
                     self._results[r.rid] = res
                     self.completed.append(r)
                     newly.append(res)
@@ -672,14 +747,26 @@ class ServingSystem:
     # ------------------------------------------------------------- internal
     def _dispatch(self, rep: Replica, plan: BatchPlan,
                   now_s: float) -> List[ServeResult]:
-        timing = rep.engine.run_batch(plan)      # real measured compute
+        # stream pick depends only on state run_batch never touches, so
+        # hoisting it above the compute keeps values identical while giving
+        # the tracer the batch's start time
         sidx = int(np.argmin(rep.streams))
         start = max(now_s, rep.streams[sidx])
+        tr = self.tracer
+        if tr is not None:
+            tr.set_time(now_s)
+        timing = rep.engine.run_batch(plan)      # real measured compute
         dur = timing["critical_s"]
         rep.streams[sidx] = start + dur
         rep.dispatches += 1
         rep.completed += plan.size
         rep.cost_model.observe(plan.padded_tokens, dur)
+        if tr is not None:
+            tr.span("batch", start, start + dur, replica=rep.index,
+                    track=f"stream {sidx}",
+                    args={"size": plan.size, "bucket_len": plan.bucket_len,
+                          "dispatches": timing.get("dispatches", 0)})
+            tr.observe("stage_seconds", dur, stage="step")
         out = []
         for r in plan.requests:
             r.dispatch_s = start
@@ -697,6 +784,14 @@ class ServingSystem:
                 timing={"queue_s": start - r.arrival_s,
                         "batch_size": float(plan.size),
                         "bucket_len": float(plan.bucket_len), **timing})
+            if tr is not None:
+                tr.observe("stage_seconds", start - r.arrival_s,
+                           stage="queue")
+                tr.request_span(r.rid, "queued", r.arrival_s, start)
+                tr.request_span(r.rid, "batch", start, start + dur)
+                tr.count("requests_completed", tier=r.tier)
+                tr.request_end(r.rid, r.finish_s, "completed")
+                res.spans = tr.take_request_spans(r.rid)
             self._results[r.rid] = res
             self.completed.append(r)
             out.append(res)

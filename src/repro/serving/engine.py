@@ -190,6 +190,22 @@ class GREngine:
         self._jit_phase0 = jax.jit(self.decoder.beam_phase0)
         self._jit_phase = jax.jit(self.decoder.beam_phase_paged,
                                   static_argnames=("d",))
+        # flight recorder (ISSUE 10): None unless the serving system wires
+        # one in — every site below guards on it, so the default path runs
+        # the exact pre-telemetry code
+        self.tracer = None
+        self.trace_replica = 0
+
+    def set_tracer(self, tracer, replica: int = 0) -> None:
+        """Attach the flight recorder; spans land on ``replica``'s track.
+        Propagates to the KV arena and prefix cache (duck-typed ``tracer``
+        attributes — ``core/`` never imports serving)."""
+        self.tracer = tracer
+        self.trace_replica = int(replica)
+        for part in (self.arena, self.prefix_cache):
+            if part is not None:
+                part.tracer = tracer
+                part.trace_replica = self.trace_replica
 
     # ---------------------------------------------------------------- utils
     def _track_pool(self, phases, requests: int = 1) -> None:
@@ -278,6 +294,8 @@ class GREngine:
                     host_spill_bytes=getattr(self.serve_cfg,
                                              "host_spill_bytes", 0))
                 self.stats.cache_enabled = True
+            if self.tracer is not None:    # arena is lazy: re-wire on build
+                self.set_tracer(self.tracer, self.trace_replica)
         return self.arena
 
     def _new_runtime(self, req, shared_pids=(),
@@ -427,6 +445,12 @@ class GREngine:
         nd = self.gr.num_decode_phases
         device_s = compile_s = 0.0
         dispatches = 0
+        tr = self.tracer
+        # span cursor: each blocked call's measured duration tiles
+        # [step start, step start + device_s] on the simulated clock —
+        # exactly the window the scheduler will charge this step
+        cur = tr.time() if tr is not None else 0.0
+        step_t0 = cur
         for e in plan.entries:
             r = e.req
             if e.kind == "prefill":
@@ -445,6 +469,13 @@ class GREngine:
                 device_s += dt
                 compile_s += cs
                 dispatches += 1
+                if tr is not None:
+                    tr.span("prefill_chunk", cur, cur + dt,
+                            replica=self.trace_replica, rid=r.rid,
+                            args={"offset": e.offset, "len": e.chunk_len,
+                                  "bucket": cb, "last": e.last_chunk})
+                    tr.observe("stage_seconds", dt, stage="prefill")
+                    cur += dt
                 self.stats.prompt_tokens += e.chunk_len
                 self.stats.padded_tokens += cb
                 if e.last_chunk:
@@ -454,6 +485,11 @@ class GREngine:
                     device_s += dt
                     compile_s += cs
                     dispatches += 1
+                    if tr is not None:
+                        tr.span("beam_phase0", cur, cur + dt,
+                                replica=self.trace_replica, rid=r.rid)
+                        tr.observe("stage_seconds", dt, stage="decode")
+                        cur += dt
                     self._track_pool((0,))
                     if nd <= 1 or e.final:
                         self._finalize(r, rt)
@@ -472,6 +508,13 @@ class GREngine:
                 device_s += dt
                 compile_s += cs
                 dispatches += 1
+                if tr is not None:
+                    tr.span("decode_phase", cur, cur + dt,
+                            replica=self.trace_replica, rid=r.rid,
+                            args={"phase": d,
+                                  "select": self.gr.beam_select})
+                    tr.observe("stage_seconds", dt, stage="decode")
+                    cur += dt
                 self._track_pool((d,))
                 self.stats.padded_tokens += self.gr.beam_width
                 self.stats.decode_groups += 1
@@ -480,6 +523,13 @@ class GREngine:
                     self.stats.decode_group_width_max, 1)
                 if d == nd - 1 or e.final:
                     self._finalize(r, rt)
+        if tr is not None:
+            tr.span("step", step_t0, step_t0 + device_s,
+                    replica=self.trace_replica,
+                    args={"entries": len(plan.entries),
+                          "dispatches": dispatches,
+                          "tokens": plan.token_cost})
+            tr.observe("stage_seconds", device_s, stage="step")
         self.stats.batches += 1
         self.stats.dispatches += dispatches
         self.stats.device_s += device_s

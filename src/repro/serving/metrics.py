@@ -1,16 +1,35 @@
-"""Latency/throughput summaries (avg + P99 under varying RPS — paper §9.1)."""
+"""Latency/throughput summaries (avg + P99 under varying RPS — paper §9.1).
+
+Every summary here is **finite-safe**: an empty run (no completed requests,
+zero duration, no decode groups) yields 0.0 defaults instead of NaN/inf, so
+reports always survive ``json.dumps(..., allow_nan=False)`` and Prometheus
+exposition — strict JSON consumers choke on the bare ``NaN`` token Python's
+default encoder emits (locked by tests/test_telemetry.py).
+"""
 
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Sequence
 
 import numpy as np
 
 
-def percentile(xs: Sequence[float], q: float) -> float:
+def percentile(xs: Sequence[float], q: float,
+               default: float = 0.0) -> float:
+    """Finite percentile of ``xs``; ``default`` when empty."""
     if not len(xs):
-        return float("nan")
-    return float(np.percentile(np.asarray(xs), q))
+        return float(default)
+    return _finite(float(np.percentile(np.asarray(xs), q)), default)
+
+
+def _finite(x: float, default: float = 0.0) -> float:
+    """``x`` as a finite float; ``default`` for NaN/±inf/None."""
+    try:
+        x = float(x)
+    except (TypeError, ValueError):
+        return float(default)
+    return x if math.isfinite(x) else float(default)
 
 
 def engine_summary(stats) -> Dict[str, float]:
@@ -48,7 +67,7 @@ def beam_pool_summary(stats) -> Dict[str, float]:
             / max(getattr(stats, "beam_scanned_sum", 0), 1),
     }
     if not n:
-        return {"phases": 0, "mean_pool": float("nan"), "max_pool": 0,
+        return {"phases": 0, "mean_pool": 0.0, "max_pool": 0,
                 "saved_fraction": 0.0, **early}
     return {
         "phases": n,
@@ -72,7 +91,7 @@ def pipeline_summary(stats) -> Dict[str, float]:
     return {
         "decode_groups": g,
         "mean_group_width":
-            stats.decode_group_width_sum / g if g else float("nan"),
+            stats.decode_group_width_sum / g if g else 0.0,
         "max_group_width": int(stats.decode_group_width_max),
         "sync_stall_s": stats.sync_stall_s,
         "arena_pages": int(stats.arena_pages),
@@ -148,11 +167,11 @@ def latency_summary(latencies_s: Sequence[float],
     n = len(arr)
     return {
         "requests": n,
-        "throughput_rps": n / duration_s if duration_s > 0 else float("nan"),
-        "avg_ms": float(arr.mean() * 1e3) if n else float("nan"),
-        "p50_ms": percentile(arr, 50) * 1e3 if n else float("nan"),
-        "p99_ms": percentile(arr, 99) * 1e3 if n else float("nan"),
-        "max_ms": float(arr.max() * 1e3) if n else float("nan"),
+        "throughput_rps": _finite(n / duration_s) if duration_s > 0 else 0.0,
+        "avg_ms": _finite(arr.mean() * 1e3) if n else 0.0,
+        "p50_ms": percentile(arr, 50) * 1e3,
+        "p99_ms": percentile(arr, 99) * 1e3,
+        "max_ms": _finite(arr.max() * 1e3) if n else 0.0,
     }
 
 
@@ -177,11 +196,11 @@ def overload_summary(results, duration_s: float) -> Dict[str, float]:
         "shed": sum(1 for r in results if r.status == "shed"),
         "degraded": sum(1 for r in served if r.degraded),
         "goodput_rps":
-            n / duration_s if duration_s > 0 else float("nan"),
+            _finite(n / duration_s) if duration_s > 0 else 0.0,
         "shed_fraction":
             1.0 - n / len(results) if results else 0.0,
-        "p99_ms": percentile(lats, 99) * 1e3 if n else float("nan"),
-        "avg_ms": float(np.mean(lats) * 1e3) if n else float("nan"),
+        "p99_ms": percentile(lats, 99) * 1e3,
+        "avg_ms": _finite(np.mean(lats) * 1e3) if n else 0.0,
     }
 
 
@@ -195,8 +214,8 @@ def ttft_summary(ttfts_s: Sequence[float]) -> Dict[str, float]:
     arr = np.asarray(ttfts_s, np.float64)
     n = len(arr)
     return {
-        "ttft_avg_ms": float(arr.mean() * 1e3) if n else float("nan"),
-        "ttft_p50_ms": percentile(arr, 50) * 1e3 if n else float("nan"),
-        "ttft_p99_ms": percentile(arr, 99) * 1e3 if n else float("nan"),
-        "ttft_max_ms": float(arr.max() * 1e3) if n else float("nan"),
+        "ttft_avg_ms": _finite(arr.mean() * 1e3) if n else 0.0,
+        "ttft_p50_ms": percentile(arr, 50) * 1e3,
+        "ttft_p99_ms": percentile(arr, 99) * 1e3,
+        "ttft_max_ms": _finite(arr.max() * 1e3) if n else 0.0,
     }

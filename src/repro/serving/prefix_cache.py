@@ -100,6 +100,10 @@ class PrefixCache:
     recency — oldest first — which is the LRU eviction order.
     """
 
+    #: flight recorder (ISSUE 10), wired through ``GREngine.set_tracer``
+    tracer = None
+    trace_replica = 0
+
     def __init__(self, arena: KVArena, host_spill_bytes: int = 0):
         self.arena = arena
         self.host_spill_bytes = int(host_spill_bytes)
@@ -171,6 +175,17 @@ class PrefixCache:
             self.stats.hits += 1
             self.stats.hit_pages += len(pids)
             self.stats.hit_tokens += len(pids) * pg
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("cache_probe", tr.now(), replica=self.trace_replica,
+                       track="scheduler",
+                       args={"probed_pages": len(keys),
+                             "hit_pages": len(pids),
+                             "hit_tokens": len(pids) * pg})
+            tr.count("cache_lookups")
+            if pids:
+                tr.count("cache_hits")
+                tr.count("cache_hit_tokens", len(pids) * pg)
         return pids, len(pids) * pg
 
     def insert(self, tokens: np.ndarray, table: np.ndarray) -> int:
@@ -195,6 +210,8 @@ class PrefixCache:
                                         pid)
             added += 1
         self.stats.insert_pages += added
+        if added and self.tracer is not None:
+            self.tracer.count("cache_insert_pages", added)
         return added
 
     # ----------------------------------------------------- spill/restore
@@ -208,6 +225,12 @@ class PrefixCache:
         self._host_bytes -= self.arena.page_nbytes
         self.stats.restores += 1
         self.stats.restore_bytes += self.arena.page_nbytes
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("cache_restore", tr.now(), replica=self.trace_replica,
+                       track="engine", args={"pid": pid,
+                                             "bytes": self.arena.page_nbytes})
+            tr.count("cache_restore_bytes", self.arena.page_nbytes)
 
     def _on_pressure(self, need: int) -> int:
         """Arena pressure callback: surrender up to ``need`` device pages,
@@ -231,14 +254,25 @@ class PrefixCache:
         to make room), else discard the entry."""
         nb = self.arena.page_nbytes
         self.stats.evictions += 1
+        tr = self.tracer
         if self._make_host_room(nb):
             e.host_k, e.host_v = self.arena.read_page(e.pid)
             self._host_bytes += nb
             self.stats.spilled += 1
             self.stats.spill_bytes += nb
+            if tr is not None:
+                tr.instant("cache_spill", tr.now(),
+                           replica=self.trace_replica, track="engine",
+                           args={"pid": e.pid, "bytes": nb})
+                tr.count("cache_spill_bytes", nb)
             self.arena.decref(e.pid)
             e.pid = None                     # stays lookupable, host tier
         else:
+            if tr is not None:
+                tr.instant("cache_drop", tr.now(),
+                           replica=self.trace_replica, track="engine",
+                           args={"pid": e.pid})
+                tr.count("cache_drops")
             self.arena.decref(e.pid)
             del self._entries[key]
             self.stats.dropped += 1

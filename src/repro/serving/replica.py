@@ -96,6 +96,9 @@ class ReplicaRouter:
     accounting (ISSUE 7): every submit lands on exactly one replica and the
     placement map records the owner for abort/metrics."""
 
+    #: flight recorder (ISSUE 10), wired by ServingSystem when tracing
+    tracer = None
+
     def __init__(self, replicas: Sequence[Replica]):
         if not replicas:
             raise ValueError("router needs >= 1 replica")
@@ -126,6 +129,13 @@ class ReplicaRouter:
         rep.inflight_tokens += tokens
         rep.tier_inflight[tier] = rep.tier_inflight.get(tier, 0) + 1
         self._load[state.rid] = (tier, tokens)
+        tr = self.tracer
+        if tr is not None:
+            tr.instant("place", tr.time(), replica=rep.index,
+                       track="scheduler", rid=state.rid,
+                       args={"outstanding_tokens": rep.outstanding_tokens(),
+                             "queue_depth": rep.queue_depth()})
+            tr.count("routed_requests", replica=rep.index)
         return rep
 
     def settle(self, rid: int) -> None:

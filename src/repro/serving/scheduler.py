@@ -128,6 +128,10 @@ def available_policies() -> List[str]:
 class TokenCapacityBatcher:
     """FIFO token-capacity dynamic batching with an SLO wait quota."""
 
+    #: flight recorder (ISSUE 10), wired by ServingSystem when tracing
+    tracer = None
+    trace_replica = 0
+
     def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
         self.cfg = cfg
         self.min_bucket = min_bucket
@@ -183,6 +187,14 @@ class TokenCapacityBatcher:
                 self.queue.appendleft(r)
             return None
         blen = max(bucket_len(r.prompt_len, self.min_bucket) for r in batch)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "batch_cut", now_s, replica=self.trace_replica,
+                track="scheduler",
+                args={"size": len(batch), "bucket": blen,
+                      "trigger": ("capacity" if capacity_hit else
+                                  "quota" if oldest_wait >= quota
+                                  else "force")})
         return BatchPlan(requests=batch, bucket_len=blen, formed_s=now_s)
 
     def outstanding_tokens(self) -> int:
@@ -249,6 +261,10 @@ class BucketAffinityBatcher:
     pads to its own bucket length (zero cross-bucket padding).
     """
 
+    #: flight recorder (ISSUE 10), wired by ServingSystem when tracing
+    tracer = None
+    trace_replica = 0
+
     def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
         self.cfg = cfg
         self.min_bucket = min_bucket
@@ -292,6 +308,11 @@ class BucketAffinityBatcher:
         q = self.buckets[blen]
         cap = self._capacity(blen)
         batch = [q.popleft() for _ in range(min(cap, len(q)))]
+        if self.tracer is not None:
+            self.tracer.instant(
+                "batch_cut", now_s, replica=self.trace_replica,
+                track="scheduler",
+                args={"size": len(batch), "bucket": blen})
         return BatchPlan(requests=batch, bucket_len=blen, formed_s=now_s)
 
     def maybe_dispatch(self, now_s: float, force: bool = False
@@ -348,6 +369,10 @@ class ChunkedPrefillScheduler:
     """
 
     PREFILL_RESERVE = 4             # reserve budget/4 for prefill chunks
+
+    #: flight recorder (ISSUE 10), wired by ServingSystem when tracing
+    tracer = None
+    trace_replica = 0
 
     def __init__(self, cfg: ServeConfig, min_bucket: int = 64):
         self.cfg = cfg
@@ -426,6 +451,7 @@ class ChunkedPrefillScheduler:
         if len({r.tier for r in self.waiting}) > 1:
             self.waiting = deque(sorted(self.waiting,
                                         key=lambda r: -r.tier))
+        tr = self.tracer
         while self.waiting and len(self.active) < self.cfg.max_batch_requests:
             req = self.waiting.popleft()
             req.phase = Phase.PREFILLING
@@ -438,6 +464,16 @@ class ChunkedPrefillScheduler:
                     req.cached_tokens = skip
                     req.next_offset = skip
             self.active.append(req)
+            if tr is not None:
+                tr.instant("admit", now_s, replica=self.trace_replica,
+                           track="scheduler", rid=req.rid,
+                           args={"cached_tokens": req.cached_tokens,
+                                 "waited_s": now_s - req.enqueue_s})
+        if tr is not None:
+            tr.gauge("scheduler_active", len(self.active),
+                     replica=self.trace_replica)
+            tr.gauge("scheduler_waiting", len(self.waiting),
+                     replica=self.trace_replica)
 
     def plan_step(self, now_s: float) -> Optional[StepPlan]:
         """Pack one engine step; None when nothing is active."""

@@ -64,6 +64,16 @@ class ServerReport:
     #: deadline misses among admitted requests, and the calibrated per-
     #: replica cost models (see ServingSystem.overload_report)
     overload: Dict = dataclasses.field(default_factory=dict)
+    #: per-stage latency histogram breakdown (ISSUE 10): stage ->
+    #: {count, total_ms, avg_ms, p50_ms, p99_ms, max_ms} for the
+    #: queue/prefill/decode/barrier/lane_wait/step stages; empty when
+    #: tracing is off (see telemetry.Tracer.stage_summary)
+    stages: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    #: the flight recorder itself when ``serve_cfg.trace`` was on — call
+    #: ``write_chrome_trace(path)`` / ``to_prometheus()`` on it; None when
+    #: tracing is off
+    tracer: object = None
 
     @property
     def slo_violations(self) -> int:
@@ -94,6 +104,7 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
     ttft = [(r.first_beam_s if r.first_beam_s is not None else r.finish_s)
             - r.arrival_s for r in done]
     stats = system.engine_stats()
+    tracer = getattr(system, "tracer", None)
     return ServerReport(
         summary=latency_summary(lat, duration),
         requests=done,
@@ -105,4 +116,6 @@ def run_server(engine: GREngine, trace, serve_cfg: ServeConfig,
         cache=cache_summary(stats),
         replicas=replica_summary(system.replicas),
         overload=system.overload_report(),
+        stages=tracer.stage_summary() if tracer is not None else {},
+        tracer=tracer,
     )
